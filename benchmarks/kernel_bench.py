@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks: the three Pallas primitives across density.
+
+Wall-clock here is CPU interpret-mode (correctness path), NOT a TPU claim —
+the TPU numbers are the perf-model / roofline terms also printed.  This bench
+demonstrates the skip behaviour: SpDMM work scales with block density.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perfmodel import TPUV5E, TaskShape, t_dense, t_spdmm
+from repro.kernels import ops
+from repro.kernels.formats import pack_blockcsr
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        np.asarray(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv: list[str]) -> None:
+    print("\n== Kernel μbench (interpret-mode wall; v5e model time) ==")
+    rng = np.random.default_rng(0)
+    m = k = n = 256
+    block = 32
+    y = rng.normal(size=(k, n)).astype(np.float32)
+
+    t_g = _time(ops.gemm, jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)),
+                jnp.asarray(y), bm=64, bn=64, bk=64, interpret=True)
+    model_t = t_dense(TaskShape(m, k, n, 1.0, 1.0), TPUV5E)
+    print(f"gemm {m}x{k}x{n}: wall {t_g * 1e6:9.1f} us | v5e model "
+          f"{model_t * 1e9:7.1f} ns")
+    csv.append(f"kernel/gemm_{m},{t_g * 1e6:.1f},{model_t * 1e9:.1f}")
+
+    for density in (0.1, 0.3, 0.6, 1.0):
+        mask = (rng.uniform(size=(m // block, k // block)) < density
+                ).astype(np.float32)
+        a_dense = (rng.normal(size=(m, k)) *
+                   np.kron(mask, np.ones((block, block)))).astype(np.float32)
+        a = pack_blockcsr(a_dense, block)
+        t_s = _time(ops.spdmm, a, jnp.asarray(y), bn=block, interpret=True)
+        alpha = a.block_density()
+        model_t = t_spdmm(TaskShape(m, k, n, alpha, 1.0), TPUV5E)
+        print(f"spdmm α_blk={alpha:4.2f}: wall {t_s * 1e6:9.1f} us | "
+              f"v5e model {model_t * 1e9:7.1f} ns | stored blocks "
+              f"{a.stored_blocks}")
+        csv.append(f"kernel/spdmm_a{alpha:.2f},{t_s * 1e6:.1f},"
+                   f"{model_t * 1e9:.1f}")

@@ -1,0 +1,29 @@
+"""Paper Table VIII: scaling the AIE array 192 -> 384 tiles (GCN), assuming
+sufficient external memory bandwidth (paper lifts the DDR bound for the
+scaled scenario; we mirror that by scaling mem_bw with the tile count)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import DSETS, replay
+from repro.core.perfmodel import VCK5000, VCK5000_384
+
+PAPER_192_MS = {"CO": 9.40e-3, "CI": 1.22e-2, "PU": 8.65e-2, "FL": 6.10e0,
+                "NE": 5.20e0, "RE": 9.10e1}
+PAPER_384_MS = {"CO": 9.40e-3, "CI": 1.22e-2, "PU": 8.65e-2, "FL": 2.53e0,
+                "NE": 4.25e0, "RE": 7.97e1}
+
+
+def run(csv: list[str]) -> None:
+    print("\n== Table VIII: AIE tile scaling 192 -> 384 (GCN) ==")
+    hw384 = dataclasses.replace(VCK5000_384, mem_bw=VCK5000.mem_bw * 2)
+    print(f"{'ds':>3} {'192t ms':>9} {'384t ms':>9} {'speedup':>8} "
+          f"{'paper speedup':>13}")
+    for ds in DSETS:
+        _, t192 = replay("GCN", ds, hw=VCK5000)
+        _, t384 = replay("GCN", ds, hw=hw384)
+        paper_spd = PAPER_192_MS[ds] / PAPER_384_MS[ds]
+        print(f"{ds:>3} {t192 * 1e3:9.4g} {t384 * 1e3:9.4g} "
+              f"{t192 / t384:8.2f} {paper_spd:13.2f}")
+        csv.append(f"table_viii/{ds}/scale_192_384_speedup,,"
+                   f"{t192 / t384:.3f}")

@@ -1,0 +1,27 @@
+"""Full-graph GNN inference across models x datasets (paper Table VI shape).
+
+    PYTHONPATH=src python examples/gnn_inference.py [--datasets CO,CI,PU]
+"""
+import argparse
+
+from repro.core import DynasparseEngine
+from repro.data.graphs import load_graph
+from repro.models import gnn
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--datasets", default="CO,CI,PU")
+ap.add_argument("--models", default="GCN,GraphSAGE,GIN,SGC")
+args = ap.parse_args()
+
+print(f"{'model':>10} {'ds':>3} {'hw time (ms)':>12} {'dense/executed FLOPs':>21}")
+for model in args.models.split(","):
+    for ds in args.datasets.split(","):
+        g = load_graph(ds)
+        h = g.features
+        params = gnn.init_params(model, h.shape[1], g.stats.hidden,
+                                 g.stats.classes)
+        eng = DynasparseEngine()
+        _, report = gnn.run_inference(model, eng, g.adj, h, params)
+        tot = report.total
+        print(f"{model:>10} {ds:>3} {report.hardware_time * 1e3:>12.4f} "
+              f"{tot.flops_dense_equiv / tot.flops_executed:>20.1f}x")

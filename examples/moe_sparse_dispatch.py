@@ -1,0 +1,42 @@
+"""The paper's technique inside the LM stack: MoE expert dispatch as
+block-sparse matmul.
+
+Top-6-of-64 routing means the token->expert activation matrix has 9.4%
+density; the analyzer (TPU-v5e perf model) picks the sparse dispatch path,
+and the block-sparse SpDMM kernel computes the same result as a dense
+masked GEMM — demonstrated numerically here.
+
+    PYTHONPATH=src python examples/moe_sparse_dispatch.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.configs.reduced import reduce_config
+from repro.models.ffn import moe_dispatch_report
+from repro.kernels import ops
+from repro.kernels.formats import pack_blockcsr
+
+cfg = reduce_config(ARCHS["deepseek-v2-lite-16b"])
+rep = moe_dispatch_report(ARCHS["deepseek-v2-lite-16b"], tokens=4096)
+print("analyzer decision for deepseek-v2-lite dispatch "
+      f"(density {rep['density']:.3f}): {rep['primitive']}")
+print(f"  t_dense={rep['t_dense']:.3e}s  t_sparse={rep['t_sparse']:.3e}s")
+
+# numeric demo: block-sparse expert activation x dense weight
+rng = np.random.default_rng(0)
+T, E, B = 64, 8, 8          # tokens, experts, block
+mask = np.zeros((T // B, E), np.float32)
+for i in range(T // B):     # each token-block activates top-2 experts
+    mask[i, rng.choice(E, 2, replace=False)] = 1.0
+acts = (rng.normal(size=(T, E * B)).astype(np.float32)
+        * np.kron(mask, np.ones((B, B))))
+w = rng.normal(size=(E * B, 32)).astype(np.float32)
+
+a_sparse = pack_blockcsr(acts, B)
+z_sparse = ops.spdmm(a_sparse, jnp.asarray(w), bn=8, interpret=True)
+z_dense = acts @ w
+print(f"block density: {a_sparse.block_density():.3f} "
+      f"(stored {a_sparse.nnzb}/{(T // B) * E} blocks)")
+print("sparse == dense:",
+      bool(np.allclose(np.asarray(z_sparse), z_dense, atol=1e-3)))

@@ -1,0 +1,14 @@
+"""Batched serving demo: greedy decode with KV cache on reduced configs,
+including the MoE arch whose expert dispatch routes through the paper's
+analyzer.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+for arch in ("qwen2.5-3b", "deepseek-v2-lite-16b", "mamba2-780m"):
+    print(f"== {arch} ==")
+    subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                    "--arch", arch, "--batch", "2", "--prompt-len", "8",
+                    "--gen", "8"], check=True)

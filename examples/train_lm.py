@@ -1,0 +1,16 @@
+"""End-to-end training driver demo: reduced phi3 config, checkpoint +
+restart mid-run (the fault-tolerance path), loss must improve.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import subprocess
+import sys
+
+base = [sys.executable, "-m", "repro.launch.train", "--arch",
+        "phi3-mini-3.8b", "--ckpt-dir", "/tmp/repro_demo_ckpt",
+        "--batch", "8", "--seq", "64"]
+print(">> train 12 steps (checkpoint every 6)")
+subprocess.run(base + ["--steps", "12", "--ckpt-every", "6"], check=True)
+print(">> simulate preemption: resume from latest checkpoint, 6 more steps")
+subprocess.run(base + ["--steps", "18", "--ckpt-every", "6", "--resume"],
+               check=True)

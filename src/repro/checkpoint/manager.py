@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpointing: async, atomic, sharded, reshardable.
+
+Layout per step::
+
+    <dir>/step_000123.tmp/      (written)
+    <dir>/step_000123/          (atomic rename on completion)
+        manifest.json           step, config hash, pytree structure, shapes
+        arr_<idx>.npy           one file per leaf (host-gathered)
+
+Design points for 1000+ node deployments (documented vs. implemented here):
+- *Atomicity*: rename-on-complete; a crashed writer leaves only ``.tmp``
+  which restore ignores and the next save garbage-collects.
+- *Async*: ``save`` snapshots to host memory (device_get) and hands the file
+  I/O to a background thread — the train loop resumes immediately; ``wait``
+  joins before the next save (single outstanding snapshot).
+- *Resharding*: restore places each leaf with the CALLER's shardings, so a
+  checkpoint written on a 2x16x16 mesh restores onto 16x16 (elastic
+  downsizing) or any other mesh — leaves are stored unsharded (gathered).
+  At real scale this becomes per-shard files + distributed gather; the
+  manifest format already records per-leaf shape/dtype to support it.
+- *Retention*: keep the last ``keep`` checkpoints, delete older ones.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree: Any) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in flat]
+
+
+def config_hash(cfg: Any) -> str:
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 cfg: Any = None):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.cfg_hash = config_hash(cfg) if cfg is not None else None
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Any, *, blocking: bool = False) -> None:
+        self.wait()  # one outstanding snapshot
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        # snapshot to host BEFORE returning control (consistent cut)
+        host = [(jax.tree_util.keystr(p), np.asarray(jax.device_get(x)))
+                for p, x in flat]
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "config_hash": self.cfg_hash,
+            "leaves": [{"path": p, "shape": list(a.shape),
+                        "dtype": str(a.dtype)} for p, a in host],
+        }
+
+        def write():
+            tmp = self.dir / f"step_{step:09d}.tmp"
+            final = self.dir / f"step_{step:09d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            for i, (_, a) in enumerate(host):
+                np.save(tmp / f"arr_{i}.npy", a)
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+        for tmp in self.dir.glob("*.tmp"):
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_template: Any, *, step: int | None = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        """Restore into the template's structure.  ``shardings`` (optional
+        pytree of NamedShardings) places leaves directly on the CURRENT mesh
+        — this is the elastic-resharding path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        if (self.cfg_hash and manifest["config_hash"]
+                and manifest["config_hash"] != self.cfg_hash):
+            raise ValueError(
+                f"checkpoint config hash {manifest['config_hash']} != "
+                f"current {self.cfg_hash}")
+        want_paths = _tree_paths(state_template)
+        have = {l["path"]: i for i, l in enumerate(manifest["leaves"])}
+        missing = [p for p in want_paths if p not in have]
+        if missing:
+            raise ValueError(f"checkpoint missing leaves: {missing[:5]}...")
+
+        leaves = []
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+        if shardings is not None:
+            # shardings may be a PREFIX tree (None standing for subtrees):
+            # broadcast each prefix leaf over its matching template subtree
+            flat_s: list = []
+            prefix_flat, _ = jax.tree_util.tree_flatten(
+                shardings, is_leaf=lambda x: (x is None or isinstance(
+                    x, jax.sharding.Sharding)))
+            # walk template subtrees under each prefix leaf
+            def expand(prefix, subtree):
+                n = len(jax.tree_util.tree_leaves(subtree))
+                if prefix is None or isinstance(prefix, jax.sharding.Sharding):
+                    flat_s.extend([prefix] * n)
+                else:
+                    # dict children must follow JAX's sorted-key flat order
+                    kids_p = list(sorted(prefix.items())
+                                  if isinstance(prefix, dict)
+                                  else enumerate(prefix))
+                    kids_t = (subtree.items() if isinstance(subtree, dict)
+                              else enumerate(subtree))
+                    tmap = dict(kids_t)
+                    for k, pv in kids_p:
+                        expand(pv, tmap[k])
+            expand(shardings, state_template)
+        else:
+            flat_s = [None] * len(flat_t)
+        for (p, tmpl), shard in zip(flat_t, flat_s):
+            arr = np.load(d / f"arr_{have[jax.tree_util.keystr(p)]}.npy")
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(f"{jax.tree_util.keystr(p)}: shape "
+                                 f"{arr.shape} != template {tmpl.shape}")
+            if shard is not None:
+                leaves.append(jax.device_put(arr, shard))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        return step, jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,7 @@
+"""The paper's own workload: GNN models x datasets on the Dynasparse-style
+heterogeneous engine (see repro.core / repro.models.gnn)."""
+from repro.data.graphs import DATASETS
+from repro.models.gnn import MODELS
+
+GNN_MODELS = MODELS
+GNN_DATASETS = tuple(DATASETS)

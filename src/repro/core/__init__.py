@@ -1,0 +1,16 @@
+"""The paper's primary contribution: dynamic sparsity-exploiting GNN
+inference runtime for a heterogeneous (dense-engine + sparse-engine) target.
+
+Pipeline: sparsity measurement -> 2-D task partitioning -> Analyzer
+(perf-model queue assignment, Alg. 4) -> Scheduler (engine dispatch) ->
+primitives (Pallas GEMM / SpDMM / SpMM).
+"""
+from repro.core.engine import DynasparseEngine, EngineReport
+from repro.core.perfmodel import (HardwareModel, TaskShape, VCK5000,
+                                  VCK5000_384, TPUV5E, t_dense, t_sparse)
+from repro.core.primitives import SparseCOO
+
+__all__ = [
+    "DynasparseEngine", "EngineReport", "HardwareModel", "TaskShape",
+    "VCK5000", "VCK5000_384", "TPUV5E", "t_dense", "t_sparse", "SparseCOO",
+]

@@ -1,0 +1,3 @@
+from repro.data.graphs import DATASETS, Graph, load_graph
+
+__all__ = ["DATASETS", "Graph", "load_graph"]

@@ -1,0 +1,53 @@
+"""Elastic scaling: re-mesh + checkpoint reshard after node failures.
+
+Recovery path at scale: a heartbeat monitor (``fault.py``) detects dead
+hosts → the launcher computes the largest healthy mesh (keeping the model
+axis intact; data/pod axes shrink) → the latest checkpoint is restored with
+the NEW mesh's shardings (CheckpointManager.restore with shardings) → the
+train step is re-lowered for the new mesh → training resumes.  Batch
+geometry stays constant by raising grad-accumulation microbatches to cover
+the lost data-parallel ranks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.launch.mesh import make_mesh_for_devices
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_devices: int
+    mesh_shape: tuple
+    microbatch_scale: int     # multiply cfg.microbatches by this
+
+
+def plan_remesh(n_healthy: int, *, model_parallel: int = 16,
+                original_data: int = 16, original_pods: int = 1) -> ElasticPlan:
+    """Largest usable mesh after failures.
+
+    Keeps the tensor-parallel degree (model-sharded weights can't reshard
+    cheaply mid-run); shrinks data/pod to the largest power-of-two fit; the
+    global batch is preserved by scaling microbatches.
+    """
+    if n_healthy < model_parallel:
+        raise ValueError(
+            f"{n_healthy} healthy chips < model_parallel={model_parallel}")
+    data = n_healthy // model_parallel
+    # largest power of two ≤ data (keeps batch divisibility)
+    d = 1
+    while d * 2 <= data:
+        d *= 2
+    orig = original_data * max(1, original_pods)
+    assert orig % d == 0 or d % orig == 0
+    scale = max(1, orig // d)
+    return ElasticPlan(n_devices=d * model_parallel,
+                       mesh_shape=(d, model_parallel),
+                       microbatch_scale=scale)
+
+
+def remesh(plan: ElasticPlan) -> jax.sharding.Mesh:
+    return make_mesh_for_devices(plan.n_devices,
+                                 model_parallel=plan.mesh_shape[-1])

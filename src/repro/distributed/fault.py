@@ -1,0 +1,69 @@
+"""Failure & straggler detection hooks for the launcher.
+
+This is the host-side control plane: it never enters jitted code.  On a real
+cluster each host runs a heartbeat thread; the coordinator aggregates and
+triggers the elastic re-mesh (distributed/elastic.py).  The detector logic is
+fully testable off-cluster.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+
+@dataclasses.dataclass
+class HostState:
+    last_heartbeat: float
+    step_times: deque        # recent per-step wall times
+
+
+class FaultMonitor:
+    """Tracks per-host heartbeats and per-step times.
+
+    - ``dead_hosts``: no heartbeat for ``timeout`` seconds.
+    - ``stragglers``: hosts whose rolling median step time exceeds
+      ``straggler_factor`` x the cluster median (persistent slowness — the
+      launcher responds by excluding the host at the next re-mesh, the
+      standard mitigation when checkpoint-restart is cheap).
+    """
+
+    def __init__(self, hosts: list[str], *, timeout: float = 60.0,
+                 straggler_factor: float = 2.0, window: int = 16):
+        self.timeout = timeout
+        self.straggler_factor = straggler_factor
+        now = time.monotonic()
+        self.hosts = {h: HostState(now, deque(maxlen=window)) for h in hosts}
+
+    def heartbeat(self, host: str, step_time: float | None = None,
+                  now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        st = self.hosts[host]
+        st.last_heartbeat = now
+        if step_time is not None:
+            st.step_times.append(step_time)
+
+    def dead_hosts(self, now: float | None = None) -> list[str]:
+        now = time.monotonic() if now is None else now
+        return [h for h, st in self.hosts.items()
+                if now - st.last_heartbeat > self.timeout]
+
+    @staticmethod
+    def _median(xs) -> float:
+        xs = sorted(xs)
+        return xs[len(xs) // 2] if xs else 0.0
+
+    def stragglers(self) -> list[str]:
+        medians = {h: self._median(st.step_times)
+                   for h, st in self.hosts.items() if st.step_times}
+        if len(medians) < 2:
+            return []
+        cluster = self._median(list(medians.values()))
+        if cluster <= 0:
+            return []
+        return [h for h, m in medians.items()
+                if m > self.straggler_factor * cluster]
+
+    def healthy_hosts(self, now: float | None = None) -> list[str]:
+        dead = set(self.dead_hosts(now=now)) | set(self.stragglers())
+        return [h for h in self.hosts if h not in dead]

@@ -1,0 +1,86 @@
+"""GPipe-style pipeline parallelism over a dedicated ``pipe`` mesh axis.
+
+For depth ranges where pure FSDP+TP stops scaling (n_layers >> chips per
+pod), layers are split into S stages; microbatches stream through stages via
+``collective_permute`` on the pipe axis (shard_map SPMD-pipelining, the
+jax-native equivalent of the paper's NoC-streamed task queues).
+
+Schedule: classic GPipe fill-drain with M microbatches over S stages —
+bubble fraction (S-1)/(M+S-1).  The per-stage body is any ``fn(params, x)
+-> x``; stage parameters live only on their stage's devices (the ``pipe``
+axis shards the stacked stage-parameter pytree).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(
+    mesh: Mesh,
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    stage_params: Any,        # pytree stacked on leading axis = n_stages
+    x: jax.Array,             # [M_microbatches, mb, ...] inputs
+) -> jax.Array:
+    """Run x through S pipeline stages; returns outputs [M, mb, ...].
+
+    SPMD formulation: every device holds ONE stage's params (pipe axis).
+    At tick t, stage s processes microbatch (t - s); between ticks,
+    activations shift one stage right via collective_permute.
+    """
+    n_stages = mesh.shape["pipe"]
+    n_micro = x.shape[0]
+    n_ticks = n_micro + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def per_stage(params, xs):
+        # params: this stage's slice (leading axis of size 1 under shard_map)
+        params = jax.tree.map(lambda a: a[0], params)
+        stage_id = jax.lax.axis_index("pipe")
+        mb_shape = xs.shape[1:]
+        state = jnp.zeros(mb_shape, xs.dtype)          # in-flight activation
+        outputs = jnp.zeros_like(xs)                   # stage S-1 collects
+
+        def tick(carry, t):
+            state, outputs = carry
+            # stage 0 ingests microbatch t (if any left)
+            mb_in = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False)
+            state = jnp.where(stage_id == 0,
+                              jnp.where(t < n_micro, mb_in, state), state)
+            # every stage applies its layer block
+            y = stage_fn(params, state)
+            # last stage emits microbatch (t - S + 1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            emit = (t - (n_stages - 1) >= 0) & (stage_id == n_stages - 1)
+            outputs = jnp.where(
+                emit,
+                jax.lax.dynamic_update_index_in_dim(
+                    outputs, y, out_idx, axis=0),
+                outputs)
+            # shift activations one stage to the right
+            y_next = jax.lax.ppermute(y, "pipe", perm)
+            return (y_next, outputs), None
+
+        (state, outputs), _ = jax.lax.scan(
+            tick, (state, outputs), jnp.arange(n_ticks))
+        # only the last stage holds real outputs; broadcast them back
+        src = n_stages - 1
+        outputs = jax.lax.psum(
+            jnp.where(stage_id == src, outputs, jnp.zeros_like(outputs)),
+            "pipe")
+        return outputs
+
+    spec_params = jax.tree.map(lambda _: P("pipe"), stage_params)
+    fn = jax.shard_map(per_stage, mesh=mesh,
+                       in_specs=(spec_params, P()),
+                       out_specs=P(),
+                       check_vma=False)
+    return fn(stage_params, x)
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)

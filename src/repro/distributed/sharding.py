@@ -1,0 +1,245 @@
+"""Sharding rules: parameter/cache/batch pytrees → NamedShardings.
+
+Layout (MaxText-style 2-D sharding):
+- tensor-parallel axis ``model``: attention heads, MLP hidden, vocab, experts
+- FSDP axis ``data`` (plus ``pod`` when present): the non-TP dimension of
+  every large parameter and both Adam moments — ZeRO-3 on top of TP, so
+  per-chip parameter state is O(params / n_chips)
+- batch axis for activations: ``("pod", "data")``
+
+Rules are path-regex driven (t5x-style), with divisibility guards: a dim is
+only sharded if the mesh axis divides it (MQA kv_heads=1 stays replicated).
+Scan-stacked trees ("cycles", "enc_layers", "dec_layers") get the leading
+layer axis unsharded automatically.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axes(mesh: Mesh, *names: str) -> tuple[str, ...]:
+    return tuple(n for n in names if n in mesh.axis_names)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return _axes(mesh, "pod", "data")
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return _axes(mesh, "pod", "data")
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _guard(mesh: Mesh, spec_entries, shape) -> P:
+    """Drop sharding on dims the mesh axes don't divide."""
+    out = []
+    for dim, entry in zip(shape, spec_entries):
+        if entry is None or dim % _size(mesh, entry) != 0:
+            out.append(None)
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+# (regex on '/'-joined path, spec builder given (mesh, shape))
+def _param_rules(mesh: Mesh):
+    F = fsdp_axes(mesh)
+    return [
+        # embeddings / unembedding
+        (r"embed$", lambda s: (("model",), F)),
+        (r"lm_head$", lambda s: (F, ("model",))),
+        # attention & MLA projections
+        (r"(wq|wk|wv)$", lambda s: (F, ("model",))),
+        (r"wo$", lambda s: (("model",), F)),
+        (r"(bq|bk|bv)$", lambda s: (("model",),)),
+        (r"w_dkv$", lambda s: (F, None)),
+        (r"w_kpe$", lambda s: (F, None)),
+        (r"(w_uk|w_uv)$", lambda s: (None, ("model",))),
+        # dense MLP
+        (r"(w_gate|w_up)$", lambda s: (F, ("model",)) if len(s) == 2 else None),
+        (r"w_down$", lambda s: (("model",), F) if len(s) == 2 else None),
+        # MoE: experts axis = EP over model
+        (r"router$", lambda s: (F, None)),
+        (r"experts?.*|.*moe.*", lambda s: None),  # placeholder, refined below
+        # RG-LRU
+        (r"(w_in|w_gate)$", lambda s: (F, ("model",))),
+        (r"w_out$", lambda s: (("model",), F)),
+        (r"conv_w$", lambda s: (None, ("model",))),
+        (r"(w_rgate|b_rgate|w_igate|b_igate|lam|conv_b)$",
+         lambda s: (("model",),)),
+        # SSD extras
+        (r"(a_log|dt_bias|d_skip)$", lambda s: (None,)),
+        (r"(out_norm|kv_norm)$", lambda s: (None,)),
+    ]
+
+
+def _moe_spec(name: str, shape, mesh: Mesh):
+    """Expert-stacked tensors [E, D, F] / [E, F, D]: EP over model."""
+    F = fsdp_axes(mesh)
+    if name.endswith(("w_gate", "w_up")):
+        return (("model",), F, None)
+    if name.endswith("w_down"):
+        return (("model",), None, F)
+    return None
+
+
+def param_spec(path: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf addressed by its '/'-path."""
+    # leading stacked-layer axes: cycles / enc_layers / dec_layers
+    n_stack = len(re.findall(r"(cycles|enc_layers|dec_layers)", path))
+    core_shape = shape[n_stack:]
+    name = path.split("/")[-1]
+
+    spec = None
+    if "/shared/" in path or path.endswith("shared"):
+        # shared experts = dense MLP rules
+        if name in ("w_gate", "w_up"):
+            spec = (fsdp_axes(mesh), ("model",))
+        elif name == "w_down":
+            spec = (("model",), fsdp_axes(mesh))
+    elif len(core_shape) == 3:
+        spec = _moe_spec(name, core_shape, mesh)
+    if spec is None:
+        for pat, builder in _param_rules(mesh):
+            if re.search(pat, name):
+                spec = builder(core_shape)
+                break
+    if spec is None:
+        # default: replicate small leaves, FSDP large matrices
+        if len(core_shape) == 2 and core_shape[0] * core_shape[1] > 1 << 20:
+            spec = (fsdp_axes(mesh), None)
+        else:
+            spec = (None,) * len(core_shape)
+    if spec is not None and len(spec) != len(core_shape):
+        spec = (None,) * len(core_shape)
+    full = (None,) * n_stack + tuple(spec)
+    return _guard(mesh, full, shape)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            parts.append(str(e.idx))
+        else:
+            parts.append(str(e))
+    return "/".join(parts)
+
+
+def tree_shardings(tree: Any, mesh: Mesh, spec_fn) -> Any:
+    """Map a pytree of ShapeDtypeStructs/arrays to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    shardings = [NamedSharding(mesh, spec_fn(_path_str(p), l.shape, mesh))
+                 for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def params_shardings(params: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """``fsdp=False``: TP-only placement (params replicated over data/pod,
+    sharded over model) — the inference layout: no per-layer FSDP
+    all-gathers, at the cost of params/TP_degree memory per chip.  Used by
+    the prefill/decode hillclimb (§Perf: ``infer_tp``)."""
+    if fsdp:
+        return tree_shardings(params, mesh, param_spec)
+
+    dp = set(dp_axes(mesh))
+
+    def tp_only(path: str, shape, m: Mesh) -> P:
+        spec = param_spec(path, shape, m)
+        entries = []
+        for e in spec:
+            es = (e,) if isinstance(e, str) else (e or ())
+            keep = tuple(a for a in es if a not in dp)
+            entries.append(keep if keep else None)
+        return P(*entries)
+
+    return tree_shardings(params, mesh, tp_only)
+
+
+# ---------------------------------------------------------------- caches
+def cache_spec(path: str, shape, mesh: Mesh) -> P:
+    """KV / recurrent-state caches: batch over dp axes, heads over model."""
+    dp = dp_axes(mesh)
+    n_stack = 1 if "cycles" in path or "dec" in path.split("/")[0] else 0
+    core = shape[n_stack:]
+    name = path.split("/")[-1]
+    if name in ("k", "v", "cross_k", "cross_v"):      # [B, L, Hkv, Dh]
+        # length-sharded over model: KV-head counts (8, 2, 1) don't divide a
+        # 16-way TP axis, but the 32k cache length does — attention reduces
+        # over L, so softmax/output become cheap partial-reduce all-reduces
+        # while the cache itself shards 256-way (batch x length)
+        spec = (dp, ("model",), None, None)
+    elif name in ("kv_c", "kpe"):                     # [B, L, R]
+        spec = (dp, None, None)
+    elif name == "state":                             # [B, H, P, N]
+        spec = (dp, ("model",), None, None)
+    elif name == "conv":                              # [B, W-1, C]
+        spec = (dp, None, ("model",))
+    elif name == "h":                                 # [B, dr]
+        spec = (dp, ("model",))
+    else:
+        spec = (None,) * len(core)
+    full = (None,) * n_stack + tuple(spec)
+    return _guard(mesh, full, shape)
+
+
+def cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    return tree_shardings(cache, mesh, cache_spec)
+
+
+# ---------------------------------------------------------------- batches
+def batch_spec(path: str, shape, mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    if len(shape) == 0:
+        return P()
+    spec = (dp,) + (None,) * (len(shape) - 1)
+    return _guard(mesh, spec, shape)
+
+
+def batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    return tree_shardings(batch, mesh, batch_spec)
+
+
+# ------------------------------------------------------- activation anchors
+def _current_mesh() -> Mesh | None:
+    try:
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:
+        return None
+
+
+def constrain(x, *entries):
+    """``with_sharding_constraint`` that degrades to identity outside a mesh
+    context and drops axis names the current mesh doesn't have / sizes that
+    don't divide.  Entries use logical tokens: "dp" (batch = pod+data),
+    "model", "data", None."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, e in zip(x.shape, entries):
+        if e == "dp":
+            e = dp_axes(mesh) or None
+        elif isinstance(e, str) and e not in mesh.axis_names:
+            e = None
+        if e is not None and dim % _size(mesh, e) != 0:
+            e = None
+        resolved.append(e)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute primitives.
+
+- ``gemm``  — dense matmul on the MXU (AIE-array analogue)
+- ``spdmm`` — block-sparse x dense (PL ALU-array SpDMM analogue)
+- ``spmm``  — block-sparse x block-sparse (PL ALU-array SpMM analogue)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
+``ops.py``.  Written for TPU (BlockSpec VMEM tiling, scalar prefetch), they are
+validated on CPU in ``interpret=True`` mode.
+"""
+from repro.kernels.formats import BlockCSR, pack_blockcsr, spmm_triples
+from repro.kernels.ops import gemm, spdmm, spmm, default_interpret
+
+__all__ = [
+    "BlockCSR", "pack_blockcsr", "spmm_triples",
+    "gemm", "spdmm", "spmm", "default_interpret",
+]

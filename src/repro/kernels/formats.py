@@ -1,0 +1,208 @@
+"""Block-sparse containers used by the TPU kernels.
+
+The paper's PL datapath skips zero *elements* (COO scatter-gather).  On TPU the
+natural skip unit is a tile: the MXU consumes 128x128 blocks and the VPU 8x128
+lanes, so sub-tile skipping buys nothing.  ``BlockCSR`` stores only the nonzero
+``B x B`` blocks of a matrix together with the scalar-prefetch metadata the
+Pallas kernels consume (block-row ids, block-col ids, first-visit flags).
+
+Packing happens on the host at *plan time* — the analogue of the paper's
+preprocessing + APU runtime (Sections III-B and III-E).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockCSR:
+    """Block-compressed sparse row matrix.
+
+    Blocks are stored sorted by (block_row, block_col).  Every block-row is
+    guaranteed to contain at least one stored block (empty rows get a single
+    zero block at column 0) so that Pallas output-block initialization via the
+    ``first`` flag covers the whole output.  Stored blocks may be padded at the
+    tail with zero blocks (``row_ids`` pointing at the last block-row,
+    ``first = 0``) so repeated calls can share a compilation.
+    """
+
+    shape: Tuple[int, int]          # logical (M, K) — static
+    block_size: int                 # B — static
+    row_ids: jax.Array              # (nnzb,) int32 block-row of each block
+    col_ids: jax.Array              # (nnzb,) int32 block-col of each block
+    first: jax.Array                # (nnzb,) int32 1 iff first block in its row
+    blocks: jax.Array               # (nnzb, B, B)
+    nnzb: int                       # number of REAL (non-padding) blocks — static
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        leaves = (self.row_ids, self.col_ids, self.first, self.blocks)
+        aux = (self.shape, self.block_size, self.nnzb)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        shape, block_size, nnzb = aux
+        row_ids, col_ids, first, blocks = leaves
+        return cls(shape, block_size, row_ids, col_ids, first, blocks, nnzb)
+
+    # -- helpers -----------------------------------------------------------
+    @property
+    def n_block_rows(self) -> int:
+        return _ceil_div(self.shape[0], self.block_size)
+
+    @property
+    def n_block_cols(self) -> int:
+        return _ceil_div(self.shape[1], self.block_size)
+
+    @property
+    def stored_blocks(self) -> int:
+        return int(self.blocks.shape[0])
+
+    def block_density(self) -> float:
+        return self.nnzb / max(1, self.n_block_rows * self.n_block_cols)
+
+    def todense(self) -> jax.Array:
+        """Dense reconstruction (host/oracle use)."""
+        B = self.block_size
+        M = self.n_block_rows * B
+        K = self.n_block_cols * B
+        dense = jnp.zeros((M, K), self.blocks.dtype)
+        # scatter blocks (numpy loop is fine: oracle/host path only)
+        rows = np.asarray(self.row_ids)
+        cols = np.asarray(self.col_ids)
+        blocks = np.asarray(self.blocks)
+        out = np.zeros((M, K), dtype=blocks.dtype)
+        for r, c, blk in zip(rows, cols, blocks):
+            out[r * B:(r + 1) * B, c * B:(c + 1) * B] += blk
+        dense = jnp.asarray(out)
+        return dense[: self.shape[0], : self.shape[1]]
+
+
+def pack_blockcsr(
+    x: np.ndarray,
+    block_size: int,
+    *,
+    capacity: int | None = None,
+    dtype=None,
+) -> BlockCSR:
+    """Pack a dense host array into ``BlockCSR``, skipping all-zero blocks.
+
+    ``capacity`` (optional) pads the stored-block count up so that different
+    inputs with the same capacity reuse one compiled kernel.  Padding blocks
+    point at the LAST block-row with ``first = 0`` — appended after the sorted
+    real blocks they extend the final row's consecutive revisit run, which is
+    required for output-buffer residency on real TPU grids.
+    """
+    x = np.asarray(x)
+    if x.ndim != 2:
+        raise ValueError(f"BlockCSR expects a matrix, got shape {x.shape}")
+    M, K = x.shape
+    B = block_size
+    nrb, ncb = _ceil_div(M, B), _ceil_div(K, B)
+    padded = np.zeros((nrb * B, ncb * B), dtype=x.dtype)
+    padded[:M, :K] = x
+
+    rows, cols, first, blocks = [], [], [], []
+    for rb in range(nrb):
+        row_has_block = False
+        for cb in range(ncb):
+            blk = padded[rb * B:(rb + 1) * B, cb * B:(cb + 1) * B]
+            if np.any(blk != 0):
+                rows.append(rb)
+                cols.append(cb)
+                first.append(0 if row_has_block else 1)
+                blocks.append(blk)
+                row_has_block = True
+        if not row_has_block:  # keep output init coverage
+            rows.append(rb)
+            cols.append(0)
+            first.append(1)
+            blocks.append(np.zeros((B, B), dtype=x.dtype))
+
+    nnzb = len(blocks)
+    cap = capacity if capacity is not None else nnzb
+    if cap < nnzb:
+        raise ValueError(f"capacity {cap} < stored blocks {nnzb}")
+    for _ in range(cap - nnzb):
+        rows.append(nrb - 1)
+        cols.append(0)
+        first.append(0)
+        blocks.append(np.zeros((B, B), dtype=x.dtype))
+
+    out_dtype = dtype or x.dtype
+    return BlockCSR(
+        shape=(M, K),
+        block_size=B,
+        row_ids=jnp.asarray(rows, dtype=jnp.int32),
+        col_ids=jnp.asarray(cols, dtype=jnp.int32),
+        first=jnp.asarray(first, dtype=jnp.int32),
+        blocks=jnp.asarray(np.stack(blocks).astype(out_dtype)),
+        nnzb=nnzb,
+    )
+
+
+def spmm_triples(a: BlockCSR, y: BlockCSR) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side pairing (the paper's Pairing Unit, Alg. 3 lines 3-5).
+
+    Computes the block-level intersection of A's block-rows with Y's
+    block-rows: each output block ``Z[jb, kb]`` receives one matmul per pair
+    ``(A[jb, ib], Y[ib, kb])`` where both blocks are stored.  Returns arrays
+    ``(a_ids, y_ids, out_rows, out_cols, first)`` sorted by output block, with
+    one zero-pair appended for every output block that receives no
+    contribution (so Pallas initializes it).  The zero pair indexes the
+    sentinel block appended by the SpMM wrapper at position ``stored_blocks``.
+    """
+    if a.shape[1] != y.shape[0]:
+        raise ValueError(f"spmm shape mismatch: {a.shape} x {y.shape}")
+    if a.block_size != y.block_size:
+        raise ValueError("spmm requires equal block sizes")
+
+    a_rows = np.asarray(a.row_ids)[: a.stored_blocks]
+    a_cols = np.asarray(a.col_ids)[: a.stored_blocks]
+    y_rows = np.asarray(y.row_ids)[: y.stored_blocks]
+    y_cols = np.asarray(y.col_ids)[: y.stored_blocks]
+
+    # block-row index of Y: ib -> list of (y_block_id, kb)
+    y_by_row: dict[int, list[tuple[int, int]]] = {}
+    for yid, (ib, kb) in enumerate(zip(y_rows, y_cols)):
+        y_by_row.setdefault(int(ib), []).append((yid, int(kb)))
+
+    triples: list[tuple[int, int, int, int]] = []  # (out_row, out_col, a_id, y_id)
+    for aid, (jb, ib) in enumerate(zip(a_rows, a_cols)):
+        for yid, kb in y_by_row.get(int(ib), ()):
+            triples.append((int(jb), kb, aid, yid))
+    triples.sort()
+
+    n_out_rows = a.n_block_rows
+    n_out_cols = y.n_block_cols
+    covered = {(t[0], t[1]) for t in triples}
+    sentinel_a = a.stored_blocks  # index of zero block appended by wrapper
+    sentinel_y = y.stored_blocks
+    for jb in range(n_out_rows):
+        for kb in range(n_out_cols):
+            if (jb, kb) not in covered:
+                triples.append((jb, kb, sentinel_a, sentinel_y))
+    triples.sort()
+
+    out_rows = np.array([t[0] for t in triples], dtype=np.int32)
+    out_cols = np.array([t[1] for t in triples], dtype=np.int32)
+    a_ids = np.array([t[2] for t in triples], dtype=np.int32)
+    y_ids = np.array([t[3] for t in triples], dtype=np.int32)
+    first = np.zeros(len(triples), dtype=np.int32)
+    seen: set[tuple[int, int]] = set()
+    for i, (r, c) in enumerate(zip(out_rows, out_cols)):
+        if (r, c) not in seen:
+            first[i] = 1
+            seen.add((r, c))
+    return a_ids, y_ids, out_rows, out_cols, first

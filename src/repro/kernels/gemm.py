@@ -1,0 +1,70 @@
+"""Dense GEMM Pallas kernel — the MXU analogue of the paper's AIE array.
+
+The AIE computation core streams row-major X / column-major Y partitions and
+multiply-accumulates partial products across cycles (Fig. 3).  The TPU-native
+equivalent is a three-level tiled matmul: grid ``(M/bm, N/bn, K/bk)`` with the
+contraction dimension innermost so the output block stays resident in VMEM
+while partial products accumulate (``@pl.when(k == 0)`` zero-init mirrors the
+first-cycle load in Fig. 3).  Block shapes are MXU-aligned (multiples of 128 on
+the minor dims) and sized so ``bm*bk + bk*bn + bm*bn`` floats fit VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(x_ref, y_ref, z_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        z_ref[...] = acc_ref[...].astype(z_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret", "out_dtype")
+)
+def gemm(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """``x @ y`` with explicit MXU tiling.  Shapes must be block-divisible
+    (the public wrapper in ``ops.py`` pads)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, y.shape, bm, bn, bk)
+    out_dtype = out_dtype or x.dtype
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

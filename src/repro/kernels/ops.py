@@ -1,0 +1,80 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles shape padding to block multiples, dtype policy (f32 accumulation) and
+the interpret-mode fallback (this container is CPU-only; the kernels target
+TPU, and ``interpret=True`` executes the kernel body on CPU for validation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import gemm as _gemm
+from repro.kernels import spdmm as _spdmm
+from repro.kernels import spmm as _spmm
+from repro.kernels.formats import BlockCSR, pack_blockcsr
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, m: int, n: int) -> jax.Array:
+    pm = m - x.shape[0]
+    pn = n - x.shape[1]
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _round_up(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def gemm(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128,
+         interpret: bool | None = None, out_dtype=None):
+    """Dense ``x @ y`` via the MXU-tiled Pallas kernel (pads + slices)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm_, bn_, bk_ = (min(bm, _round_up(m, 8)), min(bn, _round_up(n, 8)),
+                     min(bk, _round_up(k, 8)))
+    mp, np_, kp = _round_up(m, bm_), _round_up(n, bn_), _round_up(k, bk_)
+    out = _gemm.gemm(_pad_to(x, mp, kp), _pad_to(y, kp, np_),
+                     bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
+                     out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+def spdmm(a: BlockCSR, y, *, bn: int = 128, interpret: bool | None = None,
+          out_dtype=jnp.float32):
+    """Block-sparse ``a @ y`` (pads Y, slices output to logical shape)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, k = a.shape
+    k2, n = y.shape
+    assert k == k2, (a.shape, y.shape)
+    bn_ = min(bn, _round_up(n, 8))
+    kp = a.n_block_cols * a.block_size
+    np_ = _round_up(n, bn_)
+    out = _spdmm.spdmm(a, _pad_to(y, kp, np_), bn=bn_, interpret=interpret,
+                       out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,
+         out_dtype=jnp.float32):
+    """Block-sparse ``a @ y`` with both operands sparse."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, _ = a.shape
+    _, n = y.shape
+    out = _spmm.spmm(a, y, interpret=interpret, out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+__all__ = [
+    "BlockCSR", "pack_blockcsr", "gemm", "spdmm", "spmm", "default_interpret",
+]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.formats import BlockCSR
+
+
+def gemm_ref(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(
+        x.astype(jnp.float32), y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_dtype)
+
+
+def spdmm_ref(a: BlockCSR, y: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    dense = a.todense().astype(jnp.float32)
+    k = y.shape[0]
+    return jnp.dot(dense[:, :k], y.astype(jnp.float32)).astype(out_dtype)
+
+
+def spmm_ref(a: BlockCSR, y: BlockCSR, out_dtype=jnp.float32) -> jax.Array:
+    da = a.todense().astype(jnp.float32)
+    dy = y.todense().astype(jnp.float32)
+    return jnp.dot(da, dy).astype(out_dtype)

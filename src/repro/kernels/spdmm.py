@@ -1,0 +1,82 @@
+"""SpDMM Pallas kernel — block-sparse x dense (the PL ALU-array analogue).
+
+Paper Alg. 2 pairs every nonzero element of X with q dense lanes of Y via the
+Pairing Unit.  TPU-native version: the sparse operand is ``BlockCSR`` and the
+grid iterates *only the stored blocks*; scalar-prefetched ``row_ids/col_ids``
+arrays play the role of the Pairing Unit, steering each stored A-block to the
+matching Y block-row and output block-row.  Work (and hence cycles) scales
+with the number of stored blocks — i.e. with block density α_blk — exactly the
+paper's ``α · mnd`` skip behaviour at tile granularity.
+
+Grid order is ``(N/bn, nnzb)`` with the block index innermost: for a fixed
+output column stripe, stored blocks are visited sorted by block-row, so output
+block revisits are consecutive and the accumulator stays VMEM-resident
+(TPU requirement); ``first`` flags zero-initialize each output row run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.formats import BlockCSR
+
+
+def _spdmm_kernel(row_ref, col_ref, first_ref, a_ref, y_ref, z_ref):
+    del col_ref
+    b = pl.program_id(1)
+
+    @pl.when(first_ref[b] == 1)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    # BlockSpec (None, B, B) squeezes the stored-block axis: a_ref is (B, B)
+    z_ref[...] += jnp.dot(
+        a_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(z_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret", "out_dtype"))
+def spdmm(
+    a: BlockCSR,
+    y: jax.Array,
+    *,
+    bn: int = 128,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """``a @ y`` where ``a`` is BlockCSR and ``y`` dense ``(K, N)``.
+
+    ``K`` and ``N`` must be multiples of ``a.block_size`` / ``bn``
+    (the wrapper in ``ops.py`` pads).  Output is dense ``(M, N)`` where
+    ``M = n_block_rows * block_size`` (caller slices).
+    """
+    B = a.block_size
+    k, n = y.shape
+    assert k == a.n_block_cols * B, (a.shape, y.shape, B)
+    assert n % bn == 0, (n, bn)
+    m_pad = a.n_block_rows * B
+    nnzb = a.blocks.shape[0]
+
+    grid = (n // bn, nnzb)
+    return pl.pallas_call(
+        _spdmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                # stored A blocks: one (B, B) block per inner step
+                pl.BlockSpec((None, B, B), lambda j, b, rows, cols, first: (b, 0, 0)),
+                # Y block-row selected by the block's column id (Pairing Unit)
+                pl.BlockSpec((B, bn), lambda j, b, rows, cols, first: (cols[b], j)),
+            ],
+            out_specs=pl.BlockSpec(
+                (B, bn), lambda j, b, rows, cols, first: (rows[b], j)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
+        interpret=interpret,
+    )(a.row_ids, a.col_ids, a.first, a.blocks, y)

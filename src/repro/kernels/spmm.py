@@ -1,0 +1,98 @@
+"""SpMM Pallas kernel — block-sparse x block-sparse (paper Alg. 3).
+
+Row-wise product: ``Z[jb] = Σ_ib A[jb, ib] · Y[ib]`` computed only over pairs
+where BOTH blocks are stored.  The host-side ``spmm_triples`` pairing (the
+paper's Pairing Unit intersecting X's row nonzeros with Y's stored rows)
+produces a flat triple list sorted by output block; the grid walks that list,
+so compute scales with ``α_blk(A) · α_blk(Y)`` — the paper's
+``α_X · α_Y · mnd`` term at tile granularity.
+
+Each grid step multiplies one stored-A block into one stored-Y block and
+accumulates into the output block addressed by the scalar-prefetched
+``out_rows/out_cols``; sorting makes revisits consecutive (VMEM residency) and
+``first`` flags zero-initialize.  A sentinel zero block appended after the
+stored blocks backs the padding triples that cover otherwise-empty output
+blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.formats import BlockCSR, spmm_triples
+
+
+def _spmm_kernel(aid_ref, yid_ref, orow_ref, ocol_ref, first_ref,
+                 a_ref, y_ref, z_ref):
+    del aid_ref, yid_ref, orow_ref, ocol_ref
+    t = pl.program_id(0)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    # BlockSpec (None, B, B) squeezes the stored-block axis: refs are (B, B)
+    z_ref[...] += jnp.dot(
+        a_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(z_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_pad", "n_pad", "block_size", "interpret", "out_dtype",
+                     "n_triples"),
+)
+def _spmm_call(a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first,
+               *, m_pad, n_pad, block_size, interpret, out_dtype, n_triples):
+    B = block_size
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(n_triples,),
+            in_specs=[
+                pl.BlockSpec((None, B, B), lambda t, aid, yid, orow, ocol, first: (aid[t], 0, 0)),
+                pl.BlockSpec((None, B, B), lambda t, aid, yid, orow, ocol, first: (yid[t], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (B, B), lambda t, aid, yid, orow, ocol, first: (orow[t], ocol[t])
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        interpret=interpret,
+    )(a_ids, y_ids, out_rows, out_cols, first, a_blocks, y_blocks)
+
+
+def spmm(
+    a: BlockCSR,
+    y: BlockCSR,
+    *,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """``a @ y`` with both operands BlockCSR.  Returns dense
+    ``(n_block_rows(a)*B, n_block_cols(y)*B)`` (caller slices to logical)."""
+    B = a.block_size
+    a_ids, y_ids, out_rows, out_cols, first = spmm_triples(a, y)
+
+    # sentinel zero blocks backing the padding triples
+    zero = jnp.zeros((1, B, B), a.blocks.dtype)
+    a_blocks = jnp.concatenate([a.blocks, zero], axis=0)
+    zero_y = jnp.zeros((1, B, B), y.blocks.dtype)
+    y_blocks = jnp.concatenate([y.blocks, zero_y], axis=0)
+
+    return _spmm_call(
+        a_blocks, y_blocks,
+        jnp.asarray(a_ids), jnp.asarray(y_ids),
+        jnp.asarray(out_rows), jnp.asarray(out_cols), jnp.asarray(first),
+        m_pad=a.n_block_rows * B,
+        n_pad=y.n_block_cols * B,
+        block_size=B,
+        interpret=interpret,
+        out_dtype=out_dtype,
+        n_triples=len(a_ids),
+    )

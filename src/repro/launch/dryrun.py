@@ -1,0 +1,262 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The VERY FIRST lines force 512 host placeholder devices — before any other
+import, since jax locks the device count on first init.  Do NOT set this
+globally; only the dry-run needs it.
+
+Usage:
+    python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--jobs-file results/dryrun]
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>.json`` with memory analysis,
+cost analysis, per-collective bytes and the roofline terms. ``--all`` drives
+one subprocess per cell (isolation: a pathological cell cannot kill the
+sweep); completed cells are skipped, so the sweep is resumable.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import gc
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+DEFAULT_OUT = Path("results/dryrun")
+
+
+def _bf16_params(params):
+    """Serving-time weight dtype: bf16 copies of the f32 masters (§Perf
+    'bf16_params' — halves per-step weight reads and drops the per-step
+    f32→bf16 cast traffic)."""
+    import jax
+    import jax.numpy as jnp
+
+    return jax.tree.map(
+        lambda s: (jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                   if s.dtype == jnp.float32 else s), params)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             save_hlo: bool = False, opts: tuple[str, ...] = ()) -> dict:
+    """``opts`` enables §Perf hillclimb variants (baseline = no opts):
+    seq_shard, flash_skip, moe_shard, infer_tp (TP-only inference params),
+    mb2 (double microbatches)."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import ARCHS, SHAPES
+    from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                            params_shardings)
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (abstract_state, make_prefill_step,
+                                    make_serve_step, make_train_step)
+    from repro.models.registry import build_model, cell_is_runnable, input_specs
+    from repro.optim.adamw import AdamWConfig
+
+    cfg = ARCHS[arch]
+    if "seq_shard" in opts:
+        cfg = dataclasses.replace(cfg, seq_shard=True)
+    if "flash_skip" in opts:
+        cfg = dataclasses.replace(cfg, flash_causal_skip=True)
+    if "moe_shard" in opts:
+        cfg = dataclasses.replace(cfg, moe_dispatch_shard=True)
+    if "mb2" in opts:
+        cfg = dataclasses.replace(cfg, microbatches=cfg.microbatches * 2)
+    if "flash_vjp" in opts:
+        cfg = dataclasses.replace(cfg, flash_vjp=True)
+    shape = SHAPES[shape_name]
+    runnable, reason = cell_is_runnable(cfg, shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "opts": list(opts), "timestamp": time.time()}
+    if not runnable:
+        result.update(status="skipped-by-design", reason=reason)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    bundle = build_model(cfg)
+    specs = input_specs(cfg, shape)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            state = abstract_state(bundle)
+            state_sh = {"params": params_shardings(state["params"], mesh),
+                        "opt": {
+                            "mu": params_shardings(state["opt"]["mu"], mesh),
+                            "nu": params_shardings(state["opt"]["nu"], mesh),
+                            "step": jax.NamedSharding(
+                                mesh, jax.sharding.PartitionSpec())}}
+            batch_sh = batch_shardings(specs, mesh)
+            step = make_train_step(bundle, AdamWConfig())
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=0)
+            lowered = fn.lower(state, specs)
+        elif shape.kind == "prefill":
+            params = bundle.abstract_params()
+            if "bf16_params" in opts:
+                params = _bf16_params(params)
+            p_sh = params_shardings(params, mesh,
+                                    fsdp="infer_tp" not in opts)
+            b_sh = batch_shardings(specs, mesh)
+            fn = jax.jit(make_prefill_step(bundle),
+                         in_shardings=(p_sh, b_sh))
+            lowered = fn.lower(params, specs)
+        else:  # decode
+            params = bundle.abstract_params()
+            if "bf16_params" in opts:
+                params = _bf16_params(params)
+            cache = bundle.abstract_cache(shape.global_batch, shape.seq_len)
+            p_sh = params_shardings(params, mesh,
+                                    fsdp="infer_tp" not in opts)
+            c_sh = cache_shardings(cache, mesh)
+            b_sh = batch_shardings(specs, mesh)
+            fn = jax.jit(make_serve_step(bundle),
+                         in_shardings=(p_sh, c_sh, b_sh),
+                         donate_argnums=1)
+            lowered = fn.lower(params, cache, specs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    # loop-aware per-chip costs (cost_analysis counts while bodies once —
+    # scanned layers/microbatches would be undercounted ~1000x)
+    lc = rl.hlo_cost(hlo)
+    flops = lc["flops"]
+    bytes_acc = lc["bytes"]
+    coll = lc["collectives"]
+    terms = rl.roofline_terms(flops, bytes_acc, sum(coll.values()), n_chips)
+    mf = rl.model_flops(cfg, shape)                # whole-cluster useful flops
+
+    result.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gb": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+                / 1e9, 3),
+        },
+        cost={"flops": flops, "bytes_accessed": bytes_acc,
+              "xla_flops_once": float(cost.get("flops", 0.0)),
+              "xla_bytes_once": float(cost.get("bytes accessed", 0.0))},
+        collectives=coll,
+        roofline=terms,
+        model_flops=mf,
+        useful_flops_ratio=(round(mf / (flops * n_chips), 4)
+                            if flops else None),
+        params_b=round(cfg.param_count() / 1e9, 3),
+        params_active_b=round(cfg.param_count(active_only=True) / 1e9, 3),
+    )
+    if save_hlo:
+        hlo_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo"
+        hlo_path.write_text(hlo)
+        result["hlo_path"] = str(hlo_path)
+    del compiled, lowered, fn
+    gc.collect()
+    return result
+
+
+def all_cells():
+    from repro.configs import ARCHS, SHAPES
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                yield arch, shape, mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma list of §Perf variants: seq_shard,"
+                         "flash_skip,moe_shard,infer_tp,mb2")
+    ap.add_argument("--timeout", type=int, default=3000,
+                    help="per-cell timeout (s) in --all mode")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        cells = list(all_cells())
+        done = failed = 0
+        for arch, shape, mesh in cells:
+            path = out_dir / f"{arch}__{shape}__{mesh}.json"
+            if path.exists():
+                done += 1
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", str(out_dir)]
+            if args.save_hlo:
+                cmd.append("--save-hlo")
+            print(f"[dryrun] {arch} x {shape} x {mesh} ...", flush=True)
+            try:
+                rc = subprocess.run(cmd, timeout=args.timeout).returncode
+            except subprocess.TimeoutExpired:
+                rc = -9
+            if rc != 0 and not path.exists():
+                path.write_text(json.dumps(
+                    {"arch": arch, "shape": shape, "mesh": mesh,
+                     "status": "failed", "returncode": rc}, indent=1))
+                failed += 1
+            else:
+                done += 1
+        print(f"[dryrun] complete: {done} ok/skipped, {failed} failed "
+              f"of {len(cells)}")
+        return
+
+    assert args.arch and args.shape, "--arch/--shape required (or --all)"
+    opts = tuple(o for o in args.opt.split(",") if o)
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh, out_dir,
+                          save_hlo=args.save_hlo, opts=opts)
+    except Exception as e:  # recorded, not raised: the sweep must continue
+        result = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                  "opts": list(opts),
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    suffix = ("__" + "_".join(opts)) if opts else ""
+    path = out_dir / f"{args.arch}__{args.shape}__{args.mesh}{suffix}.json"
+    path.write_text(json.dumps(result, indent=1))
+    status = result.get("status")
+    print(f"[dryrun] {args.arch} x {args.shape} x {args.mesh}: {status}")
+    if status == "ok":
+        r = result["roofline"]
+        print(f"  compile {result['compile_s']}s | peak/dev "
+              f"{result['memory']['peak_per_device_gb']} GB | "
+              f"compute {r['compute_s']:.3e}s memory {r['memory_s']:.3e}s "
+              f"collective {r['collective_s']:.3e}s -> {r['dominant']}")
+    elif status == "error":
+        print(result["error"])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips (v5e pod), axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis maps to the DCN/ICI-superpod boundary; batch and FSDP shard over
+it, tensor-parallel stays within a pod.
+
+Functions only — importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for_devices(n_devices: int, *, model_parallel: int = 1,
+                          pods: int = 1) -> jax.sharding.Mesh:
+    """Elastic variant: largest (pod, data, model) mesh for a device count
+    (used by distributed.elastic after failures)."""
+    assert n_devices % (model_parallel * pods) == 0, (n_devices,
+                                                      model_parallel, pods)
+    data = n_devices // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh(
+            (pods, data, model_parallel), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,76 @@
+"""Batched serving driver: prefill + decode loop with a paged-style cache.
+
+``python -m repro.launch.serve --arch <id> [--batch B] [--gen N]``
+
+Runs reduced configs end-to-end on CPU; the same serve_step is what the
+dry-run lowers for decode_32k / long_500k on the production meshes.  The MoE
+archs route their expert dispatch decision through the paper's analyzer
+(``moe_dispatch_report``) — printed at startup as the integration evidence.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import ARCHS
+    from repro.configs.reduced import reduce_config
+    from repro.models.registry import build_model
+    from repro.models.ffn import moe_dispatch_report
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    bundle = build_model(cfg)
+
+    if cfg.ffn == "moe":
+        rep = moe_dispatch_report(cfg, tokens=args.batch)
+        print(f"[serve] MoE dispatch analyzer: density {rep['density']:.3f} "
+              f"-> {rep['primitive']} (t_sparse {rep['t_sparse']:.2e}s vs "
+              f"t_dense {rep['t_dense']:.2e}s)")
+
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.gen
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+
+    decode = jax.jit(bundle.decode_step, donate_argnums=1)
+    cache = bundle.init_cache(args.batch, max_len)
+
+    # prefill token-by-token (reduced configs; a fused prefill kernel is the
+    # natural next step and is exercised by the prefill_32k dry-run cells)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = decode(params,
+                               cache,
+                               jnp.asarray(prompts[:, t:t + 1], jnp.int32),
+                               jnp.int32(t))
+    toks = []
+    for t in range(args.prompt_len, max_len):
+        nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        toks.append(np.asarray(nxt))
+        logits, cache = decode(params, cache, nxt, jnp.int32(t))
+    dt = time.time() - t0
+    out = np.concatenate(toks, axis=1)
+    total_toks = args.batch * max_len
+    print(f"[serve] {args.arch}: generated {out.shape} in {dt:.2f}s "
+          f"({total_toks / dt:.1f} tok/s incl. prefill)")
+    print(f"[serve] sample: {out[0][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,405 @@
+"""Shared transformer building blocks (pure-functional JAX).
+
+Everything here is written for the TPU target: attention is a both-chunked
+online-softmax (flash-style) double ``lax.scan`` so the score matrix never
+materializes (O(qc·kc) VMEM working set per step instead of O(L²) HBM), GQA
+is computed in grouped form without repeating KV heads, and all contractions
+accumulate in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               sections: tuple[int, ...] | None = None) -> jax.Array:
+    """Rotary embedding.  ``x``: [..., L, H, Dh]; ``positions``: [B, L]
+    (classic) or [B, L, 3] (M-RoPE; ``sections`` gives the per-stream split
+    of Dh/2 frequency slots, Qwen2-VL style: temporal/height/width)."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)      # (Dh/2,)
+    if sections is None:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # [B,L,Dh/2]
+    else:
+        assert positions.ndim == 3 and positions.shape[-1] == len(sections)
+        parts = []
+        off = 0
+        for i, sec in enumerate(sections):
+            parts.append(positions[..., i:i + 1].astype(jnp.float32)
+                         * freqs[off:off + sec])
+            off += sec
+        assert off == dh // 2, (sections, dh)
+        angles = jnp.concatenate(parts, axis=-1)                   # [B,L,Dh/2]
+    cos = jnp.cos(angles)[:, :, None, :]                           # [B,L,1,Dh/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+class _FlashCarry(NamedTuple):
+    m: jax.Array    # running max      [B, Hkv, G, qc]
+    l: jax.Array    # running denom    [B, Hkv, G, qc]
+    acc: jax.Array  # running numer    [B, Hkv, G, qc, Dh]
+
+
+def flash_attention(
+    q: jax.Array,               # [B, Lq, Hq, Dh]
+    k: jax.Array,               # [B, Lk, Hkv, Dh]
+    v: jax.Array,               # [B, Lk, Hkv, Dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,  # local attention: kv within (qpos-window, qpos]
+    q_offset: int = 0,          # global position of q[0] (decode/prefill tail)
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    kv_len_mask: int | None = None,   # only the first N kv positions are valid
+    causal_skip: bool = False,        # unroll q blocks; visit only kv <= q
+) -> jax.Array:
+    """Both-chunked online-softmax attention with grouped (GQA) heads.
+
+    Memory per step is O(q_chunk x kv_chunk) — the TPU VMEM-resident flash
+    pattern — so 32k prefill never materializes an L² score matrix.
+
+    ``causal_skip`` trades HLO size for FLOPs: the outer q loop is unrolled
+    in Python so each q block's inner scan covers only the causally-visible
+    kv blocks — the upper triangle is never computed (2x causal-FLOP
+    reduction; §Perf hillclimb).
+    """
+    B, Lq, Hq, Dh = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+
+    qc = min(q_chunk, Lq)
+    kc = min(kv_chunk, Lk)
+    # pad to chunk multiples
+    nq, nk = -(-Lq // qc), -(-Lk // kc)
+    q = jnp.pad(q, ((0, 0), (0, nq * qc - Lq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, nk * kc - Lk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * kc - Lk), (0, 0), (0, 0)))
+    valid_k = kv_len_mask if kv_len_mask is not None else Lk
+
+    # [nq, B, qc, Hkv, G, Dh]
+    qb = q.reshape(B, nq, qc, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(B, nk, kc, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, kc, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+
+    q_pos_base = jnp.arange(qc) + q_offset
+    k_pos_base = jnp.arange(kc)
+
+    def q_block(carry, iq_and_qblk):
+        iq, qblk = iq_and_qblk            # qblk [B, qc, Hkv, G, Dh]
+        q_pos = q_pos_base + iq * qc      # [qc]
+
+        def kv_block(inner, ik_and_kv):
+            ik, kblk, vblk = ik_and_kv
+            k_pos = k_pos_base + ik * kc  # [kc]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            mask = (k_pos[None, :] < valid_k)
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            mask = mask[None, None, None]                  # [1,1,1,qc,kc]
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(inner.m, s.max(axis=-1))
+            # masked-row safe: p forced to 0 where invalid
+            p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(inner.m - m_new)
+            l_new = inner.l * corr + p.sum(axis=-1)
+            acc_new = (inner.acc * corr[..., None]
+                       + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                                    vblk.astype(jnp.float32)))
+            return _FlashCarry(m_new, l_new, acc_new), None
+
+        init = _FlashCarry(
+            m=jnp.full((B, Hkv, G, qc), -1e30, jnp.float32),
+            l=jnp.zeros((B, Hkv, G, qc), jnp.float32),
+            acc=jnp.zeros((B, Hkv, G, qc, Dh), jnp.float32),
+        )
+        n_vis = nk if not isinstance(iq, int) else min(
+            nk, (iq * qc + qc + kc - 1) // kc) if causal else nk
+        final, _ = jax.lax.scan(kv_block, init,
+                                (jnp.arange(n_vis), kb[:n_vis], vb[:n_vis]))
+        out = final.acc / jnp.maximum(final.l, 1e-20)[..., None]
+        return carry, out.transpose(0, 3, 1, 2, 4)  # [B, qc, Hkv, G, Dh]
+
+    if causal_skip and causal:
+        # Python-unrolled outer loop: static iq ⇒ statically-bounded inner
+        # scan lengths — the upper triangle never lowers to HLO at all
+        blocks = jnp.stack([q_block(None, (iq, qb[iq]))[1]
+                            for iq in range(nq)])
+    else:
+        _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    # blocks: [nq, B, qc, Hkv, G, Dh] -> [B, Lq, Hq, Dh]
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, Hq, Dh)
+    return out[:, :Lq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,           # [B, 1, Hq, Dh] — one new token
+    k_cache: jax.Array,     # [B, Lmax, Hkv, Dh]
+    v_cache: jax.Array,
+    cur_len: jax.Array,     # scalar int: valid cache length INCLUDING new tok
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-step attention over a (padded) KV cache."""
+    B, Lmax, Hkv, Dh = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(Lmax)
+    mask = pos[None] < cur_len
+    if window is not None:
+        mask = mask & (pos[None] > cur_len - 1 - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, Dh).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Flash attention with custom VJP (§Perf hillclimb: "flash_vjp").
+#
+# Differentiating the double-scan flash forward makes JAX save the f32
+# probability block for EVERY (q, kv) block pair — a stacked
+# [nq, nk, qc, kc] buffer per layer that dominates HBM traffic (26 TB/step
+# on deepseek-v2-236b train_4k).  The flash backward instead recomputes p
+# from the saved (q, k, v, out, lse) — residuals shrink to O(L) per head.
+# ----------------------------------------------------------------------
+def _flash_pieces(q, k, v, opts):
+    """Shared fwd returning output AND logsumexp (for the custom bwd)."""
+    causal, window, q_offset, qc, kc, valid_k, causal_skip = opts
+    B, Lq, Hq, Dh = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    nq, nk = -(-Lq // qc), -(-Lk // kc)
+    qp = jnp.pad(q, ((0, 0), (0, nq * qc - Lq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kc - Lk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kc - Lk), (0, 0), (0, 0)))
+    qb = qp.reshape(B, nq, qc, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(B, nk, kc, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, kc, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+
+    def mask_for(iq, ik):
+        q_pos = jnp.arange(qc) + iq * qc + q_offset
+        k_pos = jnp.arange(kc) + ik * kc
+        m = (k_pos[None, :] < valid_k)
+        if causal:
+            m = m & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            m = m & (k_pos[None, :] > q_pos[:, None] - window)
+        return m[None, None, None]
+
+    def q_block(_, iq_qblk):
+        iq, qblk = iq_qblk
+
+        def kv_block(inner, ik_kv):
+            ik, kblk, vblk = ik_kv
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            msk = mask_for(iq, ik)
+            s = jnp.where(msk, s, -1e30)
+            m_new = jnp.maximum(inner.m, s.max(axis=-1))
+            p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(inner.m - m_new)
+            return _FlashCarry(
+                m_new, inner.l * corr + p.sum(-1),
+                inner.acc * corr[..., None]
+                + jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                             vblk.astype(jnp.float32))), None
+
+        init = _FlashCarry(jnp.full((B, Hkv, G, qc), -1e30, jnp.float32),
+                           jnp.zeros((B, Hkv, G, qc), jnp.float32),
+                           jnp.zeros((B, Hkv, G, qc, Dh), jnp.float32))
+        n_vis = (min(nk, (iq * qc + qc + kc - 1) // kc)
+                 if (causal_skip and causal and isinstance(iq, int)) else nk)
+        fin, _ = jax.lax.scan(kv_block, init,
+                              (jnp.arange(n_vis), kb[:n_vis], vb[:n_vis]))
+        out = fin.acc / jnp.maximum(fin.l, 1e-20)[..., None]
+        lse = fin.m + jnp.log(jnp.maximum(fin.l, 1e-20))
+        return None, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    if causal_skip and causal:
+        outs, lses = zip(*[q_block(None, (iq, qb[iq]))[1] for iq in range(nq)])
+        blocks, lse = jnp.stack(outs), jnp.stack(lses)
+    else:
+        _, (blocks, lse) = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qc, Hq, Dh)
+    return out[:, :Lq].astype(q.dtype), lse  # lse: [nq, B, Hkv, G, qc]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash_core(q, k, v, opts):
+    return _flash_pieces(q, k, v, opts)[0]
+
+
+def _flash_core_fwd(q, k, v, opts):
+    out, lse = _flash_pieces(q, k, v, opts)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(opts, res, g):
+    causal, window, q_offset, qc, kc, valid_k, causal_skip = opts
+    q, k, v, out, lse = res
+    B, Lq, Hq, Dh = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / np.sqrt(Dh)
+    nq, nk = -(-Lq // qc), -(-Lk // kc)
+    qp = jnp.pad(q, ((0, 0), (0, nq * qc - Lq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kc - Lk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kc - Lk), (0, 0), (0, 0)))
+    dop = jnp.pad(g.astype(jnp.float32),
+                  ((0, 0), (0, nq * qc - Lq), (0, 0), (0, 0)))
+    outp = jnp.pad(out.astype(jnp.float32),
+                   ((0, 0), (0, nq * qc - Lq), (0, 0), (0, 0)))
+    qb = qp.reshape(B, nq, qc, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(B, nk, kc, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, kc, Hkv, Dh).transpose(1, 0, 2, 3, 4)
+    dob = dop.reshape(B, nq, qc, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    # delta = rowsum(do * out): [nq, B, Hkv, G, qc]
+    delta = ((dop * outp).sum(-1).reshape(B, nq, qc, Hkv, G)
+             .transpose(1, 0, 3, 4, 2))
+
+    def mask_for(iq, ik):
+        q_pos = jnp.arange(qc) + iq * qc + q_offset
+        k_pos = jnp.arange(kc) + ik * kc
+        m = (k_pos[None, :] < valid_k)
+        if causal:
+            m = m & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            m = m & (k_pos[None, :] > q_pos[:, None] - window)
+        return m[None, None, None]
+
+    def p_of(iq, ik, qblk, kblk, lse_blk):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk.astype(jnp.float32),
+                       kblk.astype(jnp.float32)) * scale
+        return jnp.where(mask_for(iq, ik), jnp.exp(s - lse_blk[..., None]),
+                         0.0)
+
+    # ---- dq pass: scan q blocks, inner scan kv blocks
+    def dq_block(_, xs):
+        iq, qblk, doblk, lse_blk, dlt = xs
+
+        def inner(dq_acc, ik_kv):
+            ik, kblk, vblk = ik_kv
+            p = p_of(iq, ik, qblk, kblk, lse_blk)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doblk,
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - dlt[..., None])
+            return dq_acc + scale * jnp.einsum(
+                "bhgqk,bkhd->bqhgd", ds, kblk.astype(jnp.float32)), None
+
+        dq0 = jnp.zeros((B, qc, Hkv, G, Dh), jnp.float32)
+        dq_blk, _ = jax.lax.scan(inner, dq0, (jnp.arange(nk), kb, vb))
+        return None, dq_blk
+
+    _, dq_blocks = jax.lax.scan(
+        dq_block, None, (jnp.arange(nq), qb, dob, lse, delta))
+
+    # ---- dk/dv pass: scan kv blocks, inner scan q blocks
+    def dkv_block(_, xs):
+        ik, kblk, vblk = xs
+
+        def inner(acc, iq_xs):
+            dk_acc, dv_acc = acc
+            iq, qblk, doblk, lse_blk, dlt = iq_xs
+            p = p_of(iq, ik, qblk, kblk, lse_blk)
+            dv_acc = dv_acc + jnp.einsum("bhgqk,bqhgd->bkhd", p, doblk)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doblk,
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - dlt[..., None])
+            dk_acc = dk_acc + scale * jnp.einsum(
+                "bhgqk,bqhgd->bkhd", ds, qblk.astype(jnp.float32))
+            return (dk_acc, dv_acc), None
+
+        z = (jnp.zeros((B, kc, Hkv, Dh), jnp.float32),
+             jnp.zeros((B, kc, Hkv, Dh), jnp.float32))
+        (dk_blk, dv_blk), _ = jax.lax.scan(
+            inner, z, (jnp.arange(nq), qb, dob, lse, delta))
+        return None, (dk_blk, dv_blk)
+
+    _, (dk_blocks, dv_blocks) = jax.lax.scan(
+        dkv_block, None, (jnp.arange(nk), kb, vb))
+
+    dq = dq_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(
+        B, nq * qc, Hq, Dh)[:, :Lq].astype(q.dtype)
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(
+        B, nk * kc, Hkv, Dh)[:, :Lk].astype(k.dtype)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(
+        B, nk * kc, Hkv, Dh)[:, :Lk].astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention_vjp(q, k, v, *, causal=True, window=None, q_offset=0,
+                        q_chunk=512, kv_chunk=512, kv_len_mask=None,
+                        causal_skip=False):
+    """Flash attention with the recompute-based custom backward."""
+    Lk = k.shape[1]
+    opts = (causal, window, q_offset, min(q_chunk, q.shape[1]),
+            min(kv_chunk, Lk), kv_len_mask if kv_len_mask is not None else Lk,
+            causal_skip)
+    return _flash_core(q, k, v, opts)
+
+
+# --------------------------------------------------------------- MLPs
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+def geglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+          w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+# --------------------------------------------------------------- init utils
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    s = np.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype) * s

@@ -1,0 +1,424 @@
+"""Sequence mixers: GQA attention, MLA (DeepSeek-V2), RG-LRU (Griffin /
+RecurrentGemma), SSD (Mamba-2).
+
+Uniform interface per mixer ``m``:
+    init_m(key, cfg)                      -> params
+    m_train(params, x, positions, cfg)    -> y            (full sequence)
+    m_decode(params, x, cache, pos, cfg)  -> (y, cache)   (one step)
+    m_cache(cfg, batch, max_len, dtype)   -> cache pytree
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (apply_rope, decode_attention,
+                                 flash_attention, flash_attention_vjp,
+                                 glorot, rms_norm)
+
+
+# ===================================================================== GQA
+def init_attn(key, cfg: ModelConfig):
+    D = cfg.d_model
+    Dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": glorot(ks[0], (D, cfg.n_heads * Dh)),
+        "wk": glorot(ks[1], (D, cfg.n_kv_heads * Dh)),
+        "wv": glorot(ks[2], (D, cfg.n_kv_heads * Dh)),
+        "wo": glorot(ks[3], (cfg.n_heads * Dh, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * Dh,))
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * Dh,))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * Dh,))
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    B, L, D = x.shape
+    Dh = cfg.resolved_head_dim
+    q = jnp.einsum("bld,dh->blh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bld,dh->blh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bld,dh->blh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, L, cfg.n_heads, Dh)
+    k = k.reshape(B, L, cfg.n_kv_heads, Dh)
+    v = v.reshape(B, L, cfg.n_kv_heads, Dh)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def attn_train(p, x, positions, cfg: ModelConfig):
+    q, k, v = _qkv(p, x, cfg, positions)
+    attn = flash_attention_vjp if cfg.flash_vjp else flash_attention
+    out = attn(q, k, v, causal=cfg.causal, window=cfg.window,
+               causal_skip=cfg.flash_causal_skip)
+    B, L = x.shape[:2]
+    out = out.reshape(B, L, -1)
+    return jnp.einsum("blh,hd->bld", out, p["wo"].astype(x.dtype))
+
+
+def attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    Dh = cfg.resolved_head_dim
+    # local attention only ever reads the last `window` positions
+    clen = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, clen, cfg.n_kv_heads, Dh), dtype),
+        "v": jnp.zeros((batch, clen, cfg.n_kv_heads, Dh), dtype),
+    }
+
+
+def attn_decode(p, x, cache, pos, cfg: ModelConfig):
+    """``x``: [B, 1, D]; ``pos``: scalar current position (tokens so far)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections:
+        positions = jnp.repeat(positions[..., None], 3, axis=-1)
+    q, k, v = _qkv(p, x, cfg, positions)
+    clen = cache["k"].shape[1]
+    slot = pos % clen if cfg.window else pos   # ring buffer for local attn
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if cfg.window:
+        # ring buffer: every stored slot is within the window by construction
+        valid = jnp.minimum(pos + 1, clen)
+        out = decode_attention(q, k_cache, v_cache, valid)
+    else:
+        out = decode_attention(q, k_cache, v_cache, pos + 1)
+    out = out.reshape(B, 1, -1)
+    y = jnp.einsum("blh,hd->bld", out, p["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ===================================================================== MLA
+def init_mla(key, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": glorot(ks[0], (D, H * qd)),
+        "w_dkv": glorot(ks[1], (D, cfg.kv_lora_rank)),
+        "w_kpe": glorot(ks[2], (D, cfg.qk_rope_head_dim)),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,)),
+        "w_uk": glorot(ks[3], (cfg.kv_lora_rank, H * cfg.qk_nope_head_dim)),
+        "w_uv": glorot(ks[4], (cfg.kv_lora_rank, H * cfg.v_head_dim)),
+        "wo": glorot(ks[5], (H * cfg.v_head_dim, D)),
+    }
+
+
+def _mla_qc(p, x, cfg: ModelConfig, positions):
+    """Queries + compressed KV stream (the only thing MLA caches)."""
+    B, L, _ = x.shape
+    H = cfg.n_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = jnp.einsum("bld,dh->blh", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, L, H, nope + rope_d)
+    qn, qr = q[..., :nope], q[..., nope:]
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    kv_c = jnp.einsum("bld,dr->blr", x, p["w_dkv"].astype(x.dtype))
+    kv_c = rms_norm(kv_c, p["kv_norm"], cfg.norm_eps)
+    kpe = jnp.einsum("bld,dr->blr", x, p["w_kpe"].astype(x.dtype))
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return qn, qr, kv_c, kpe
+
+
+def mla_train(p, x, positions, cfg: ModelConfig):
+    B, L, _ = x.shape
+    H = cfg.n_heads
+    qn, qr, kv_c, kpe = _mla_qc(p, x, cfg, positions)
+    # decompress K/V (training path; decode uses the absorbed form)
+    k_n = jnp.einsum("blr,rh->blh", kv_c, p["w_uk"].astype(x.dtype))
+    k_n = k_n.reshape(B, L, H, cfg.qk_nope_head_dim)
+    v = jnp.einsum("blr,rh->blh", kv_c, p["w_uv"].astype(x.dtype))
+    v = v.reshape(B, L, H, cfg.v_head_dim)
+    k = jnp.concatenate(
+        [k_n, jnp.broadcast_to(kpe[:, :, None, :],
+                               (B, L, H, cfg.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    # pad V head dim up to QK head dim for the shared flash kernel
+    qd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qd - cfg.v_head_dim)))
+    attn = flash_attention_vjp if cfg.flash_vjp else flash_attention
+    out = attn(q, k, v_p, causal=True,
+               causal_skip=cfg.flash_causal_skip)[..., :cfg.v_head_dim]
+    out = out.reshape(B, L, H * cfg.v_head_dim)
+    return jnp.einsum("blh,hd->bld", out, p["wo"].astype(x.dtype))
+
+
+def mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "kv_c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    """Absorbed-matmul MLA decode: attention runs in the rank-512 latent
+    space; the cache is (kv_c, k_pe) — 576 floats/token vs H*(nope+rope+v)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    qn, qr, kv_c, kpe = _mla_qc(p, x, cfg, positions)
+    kv_cache = jax.lax.dynamic_update_slice(cache["kv_c"], kv_c, (0, pos, 0))
+    pe_cache = jax.lax.dynamic_update_slice(cache["kpe"], kpe, (0, pos, 0))
+    # absorb W_uk into the query:  q_lat [B,1,H,lora]
+    w_uk = p["w_uk"].astype(x.dtype).reshape(
+        cfg.kv_lora_rank, H, cfg.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", qn, w_uk)
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    s = (jnp.einsum("bqhr,bkr->bhqk", q_lat.astype(jnp.float32),
+                    kv_cache.astype(jnp.float32))
+         + jnp.einsum("bqhr,bkr->bhqk", qr.astype(jnp.float32),
+                      pe_cache.astype(jnp.float32))) * scale
+    mask = jnp.arange(kv_cache.shape[1])[None] < pos + 1
+    s = jnp.where(mask[None, None], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhqk,bkr->bqhr", prob,
+                         kv_cache.astype(jnp.float32)).astype(x.dtype)
+    w_uv = p["w_uv"].astype(x.dtype).reshape(
+        cfg.kv_lora_rank, H, cfg.v_head_dim)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat, w_uv)
+    out = out.reshape(B, 1, H * cfg.v_head_dim)
+    y = jnp.einsum("blh,hd->bld", out, p["wo"].astype(x.dtype))
+    return y, {"kv_c": kv_cache, "kpe": pe_cache}
+
+
+# ===================================================================== RG-LRU
+_LRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    D = cfg.d_model
+    dr = cfg.d_rnn or D
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": glorot(ks[0], (D, dr)),       # recurrent branch
+        "w_gate": glorot(ks[1], (D, dr)),     # GeLU gate branch
+        "w_out": glorot(ks[2], (dr, D)),
+        "conv_w": glorot(ks[3], (cfg.conv_width, dr)) * 0.5,
+        "conv_b": jnp.zeros((dr,)),
+        # diagonal RG-LRU gates (RecurrentGemma uses block-diagonal; diagonal
+        # keeps the same recurrence structure at framework scale)
+        "w_rgate": jnp.zeros((dr,)),
+        "b_rgate": jnp.zeros((dr,)),
+        "w_igate": jnp.zeros((dr,)),
+        "b_igate": jnp.zeros((dr,)),
+        # Λ init so a = σ(Λ)^c ∈ (0.9, 0.999)
+        "lam": jnp.asarray(
+            np.log(np.expm1(-np.log(np.linspace(0.9, 0.999, dr)) / _LRU_C)),
+            jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width W (train path).  x: [B, L, C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    L = x.shape[1]
+    for i in range(W):
+        out = out + xp[:, i:i + L] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _lru_gates(p, u):
+    """a_t (decay) and gated input for the linear recurrence."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["w_rgate"] + p["b_rgate"])
+    i = jax.nn.sigmoid(uf * p["w_igate"] + p["b_igate"])
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, gated
+
+
+def rglru_train(p, x, positions, cfg: ModelConfig):
+    del positions
+    u = jnp.einsum("bld,dr->blr", x, p["w_in"].astype(x.dtype))
+    g = jnp.einsum("bld,dr->blr", x, p["w_gate"].astype(x.dtype))
+    u = _causal_conv(u, p["conv_w"], p["conv_b"])
+    a, gated = _lru_gates(p, u)
+    # h_t = a_t h_{t-1} + gated_t  — parallel associative scan over time
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(g)
+    return jnp.einsum("blr,rd->bld", y, p["w_out"].astype(x.dtype))
+
+
+def rglru_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    dr = cfg.d_rnn or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+    }
+
+
+def rglru_decode(p, x, cache, pos, cfg: ModelConfig):
+    del pos
+    B = x.shape[0]
+    u = jnp.einsum("bld,dr->blr", x, p["w_in"].astype(x.dtype))   # [B,1,dr]
+    g = jnp.einsum("bld,dr->blr", x, p["w_gate"].astype(x.dtype))
+    hist = jnp.concatenate([cache["conv"], u], axis=1)            # [B,W,dr]
+    w = p["conv_w"].astype(x.dtype)
+    u_c = jnp.einsum("bwr,wr->br", hist, w)[:, None] + p["conv_b"].astype(x.dtype)
+    a, gated = _lru_gates(p, u_c)
+    h = a[:, 0] * cache["h"] + gated[:, 0]
+    y = h[:, None].astype(x.dtype) * jax.nn.gelu(g)
+    out = jnp.einsum("blr,rd->bld", y, p["w_out"].astype(x.dtype))
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# ===================================================================== SSD
+def init_ssd(key, cfg: ModelConfig):
+    D = cfg.d_model
+    di, n, H = cfg.d_inner, cfg.d_state, cfg.n_ssd_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": glorot(ks[0], (D, 2 * di + 2 * n + H)),  # z, x, B, C, dt
+        "conv_w": glorot(ks[1], (cfg.conv_width, di + 2 * n)) * 0.5,
+        "conv_b": jnp.zeros((di + 2 * n,)),
+        "a_log": jnp.asarray(np.log(np.linspace(1.0, 16.0, H)), jnp.float32),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.linspace(1e-3, 1e-1, H))), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.ones((di,)),
+        "w_out": glorot(ks[2], (di, D)),
+    }
+
+
+def _segsum(x):
+    """x: [..., T] → lower-triangular pairwise sums Σ_{j<i..} (f32)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _ssd_scan(x_dt, dA, Bm, Cm, chunk):
+    """Chunked SSD (Mamba-2 Listing 1).  x_dt: [b,l,h,p] (pre-multiplied by
+    dt), dA: [b,l,h], B,C: [b,l,n].  Returns y [b,l,h,p]."""
+    b, l, h, p = x_dt.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    nc = -(-l // q)
+    pad = nc * q - l
+    x_dt = jnp.pad(x_dt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+    Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+    Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x_dt.reshape(b, nc, q, h, p)
+    Ac = dA.reshape(b, nc, q, h).transpose(0, 3, 1, 2)      # [b,h,c,q]
+    Bc = Bm.reshape(b, nc, q, n)
+    Cc = Cm.reshape(b, nc, q, n)
+
+    A_cum = jnp.cumsum(Ac, axis=-1)                          # [b,h,c,q]
+    Lmat = jnp.exp(_segsum(Ac))                              # [b,h,c,q,q]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cc, Bc, Lmat, xc)
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)          # [b,h,c,q]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xc)
+    chunk_decay = jnp.exp(A_cum[..., -1])                    # [b,h,c]
+
+    def body(s, inp):
+        st, dec = inp                    # st [b,h,p,n], dec [b,h]
+        s_next = s * dec[..., None, None] + st
+        return s_next, s                 # emit state BEFORE this chunk
+
+    s0 = jnp.zeros((b, h, p, n), x_dt.dtype)
+    _, prev_states = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [b,c,h,p,n]
+    state_decay = jnp.exp(A_cum)                             # [b,h,c,q]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)
+    return y[:, :l]
+
+
+def _ssd_proj(p, x, cfg: ModelConfig):
+    di, n, H = cfg.d_inner, cfg.d_state, cfg.n_ssd_heads
+    zxbcdt = jnp.einsum("bld,df->blf", x, p["w_in"].astype(x.dtype))
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * n]
+    dt_raw = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _ssd_post(p, y, z, x_in, d_skip, cfg: ModelConfig):
+    b, l = y.shape[:2]
+    y = y + d_skip * x_in                    # D skip connection
+    y = y.reshape(b, l, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return jnp.einsum("blf,fd->bld", y, p["w_out"].astype(y.dtype))
+
+
+def ssd_train(p, x, positions, cfg: ModelConfig):
+    del positions
+    di, n, H = cfg.d_inner, cfg.d_state, cfg.n_ssd_heads
+    P = cfg.ssd_head_dim
+    z, xbc, dt_raw = _ssd_proj(p, x, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x_in = xbc[..., :di].reshape(*x.shape[:2], H, P)
+    Bm = xbc[..., di:di + n]
+    Cm = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [b,l,H]
+    dA = -jnp.exp(p["a_log"]) * dt
+    x_dt = x_in * dt[..., None].astype(x.dtype)
+    y = _ssd_scan(x_dt.astype(jnp.float32), dA, Bm.astype(jnp.float32),
+                  Cm.astype(jnp.float32), cfg.ssd_chunk).astype(x.dtype)
+    return _ssd_post(p, y, z, x_in, p["d_skip"][:, None].astype(x.dtype), cfg)
+
+
+def ssd_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return {
+        "state": jnp.zeros((batch, cfg.n_ssd_heads, cfg.ssd_head_dim,
+                            cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+def ssd_decode(p, x, cache, pos, cfg: ModelConfig):
+    del pos
+    di, n, H = cfg.d_inner, cfg.d_state, cfg.n_ssd_heads
+    P = cfg.ssd_head_dim
+    B = x.shape[0]
+    z, xbc, dt_raw = _ssd_proj(p, x, cfg)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xbc_c = jnp.einsum("bwf,wf->bf", hist, w)[:, None] + p["conv_b"].astype(x.dtype)
+    xbc_c = jax.nn.silu(xbc_c)
+    x_in = xbc_c[..., :di].reshape(B, 1, H, P)
+    Bm = xbc_c[..., di:di + n]                     # [B,1,n]
+    Cm = xbc_c[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    dA = jnp.exp(-jnp.exp(p["a_log"]) * dt)        # [B,H]
+    # S = dA·S + dt·x ⊗ B ;  y = C·S
+    s = cache["state"] * dA[..., None, None]
+    s = s + jnp.einsum("bhp,bn,bh->bhpn", x_in[:, 0].astype(jnp.float32),
+                       Bm[:, 0].astype(jnp.float32), dt)
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm[:, 0].astype(jnp.float32))
+    y = y[:, None].astype(x.dtype)                 # [B,1,H,P]
+    out = _ssd_post(p, y, z, x_in, p["d_skip"][:, None].astype(x.dtype), cfg)
+    return out, {"state": s, "conv": hist[:, 1:]}
+
+
+# ===================================================================== registry
+MIXERS = {
+    "attn": (init_attn, attn_train, attn_decode, attn_cache),
+    "mla": (init_mla, mla_train, mla_decode, mla_cache),
+    "rglru": (init_rglru, rglru_train, rglru_decode, rglru_cache),
+    "ssd": (init_ssd, ssd_train, ssd_decode, ssd_cache),
+}

@@ -1,0 +1,101 @@
+"""Model registry: build (init / loss / forward / decode) bundles from a
+``ModelConfig`` and produce dry-run input specs for every shape cell."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, SUBQUADRATIC, ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_lib
+from repro.models import lm as lm_lib
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    abstract_params: Callable[[], Any]
+    loss: Callable[..., jax.Array]            # (params, batch) -> scalar
+    forward: Callable[..., jax.Array]         # (params, batch) -> logits
+    decode_step: Callable[..., tuple] | None  # (params, cache, tok, pos)
+    abstract_cache: Callable[..., Any] | None # (batch, max_len) -> specs
+    init_cache: Callable[..., Any] | None
+
+
+def build_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.n_enc_layers:
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encdec_lib.init_encdec(key, cfg),
+            abstract_params=lambda: encdec_lib.abstract_params(cfg),
+            loss=lambda p, b: encdec_lib.lm_loss(p, b, cfg),
+            forward=lambda p, b: encdec_lib.forward(p, b, cfg),
+            decode_step=lambda p, c, t, pos: encdec_lib.decode_step(
+                p, c, t, pos, cfg),
+            abstract_cache=lambda batch, max_len: encdec_lib.abstract_cache(
+                cfg, batch, max_len, max_tgt=max(1024, max_len // 32)),
+            init_cache=lambda batch, max_len: encdec_lib.init_cache(
+                cfg, batch, max_len, max_tgt=max(1024, max_len // 32)),
+        )
+    return ModelBundle(
+        cfg=cfg,
+        init=lambda key: lm_lib.init_lm(key, cfg),
+        abstract_params=lambda: lm_lib.abstract_params(cfg),
+        loss=lambda p, b: lm_lib.lm_loss(p, b, cfg),
+        forward=lambda p, b: lm_lib.forward(p, b, cfg),
+        decode_step=lambda p, c, t, pos: lm_lib.decode_step(p, c, t, pos, cfg),
+        abstract_cache=lambda batch, max_len: lm_lib.abstract_cache(
+            cfg, batch, max_len),
+        init_cache=lambda batch, max_len: lm_lib.init_cache(
+            cfg, batch, max_len),
+    )
+
+
+# ---------------------------------------------------------------- specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    train/prefill: a token batch (plus stub frontend embeddings for
+    audio/vlm archs, plus M-RoPE positions).  decode: one token per
+    sequence + position scalar (the KV cache is built separately via
+    ``abstract_cache`` and passed as donated state).
+    """
+    B, L = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.n_enc_layers:
+            # enc-dec: frames are the long (audio) side; text targets short
+            lt = max(128, min(1024, L // 32))
+            return {"frames": _sds((B, L, cfg.d_model), dt),
+                    "tokens": _sds((B, lt), jnp.int32)}
+        batch: dict = {}
+        if cfg.frontend_prefix > 0:
+            lp = int(L * cfg.frontend_prefix)
+            batch["embeds"] = _sds((B, lp, cfg.d_model), dt)
+            batch["tokens"] = _sds((B, L - lp), jnp.int32)
+            if cfg.mrope_sections:
+                batch["positions"] = _sds((B, L, 3), jnp.int32)
+        else:
+            batch["tokens"] = _sds((B, L), jnp.int32)
+        return batch
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": _sds((B, 1), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+def cell_is_runnable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """long_500k requires sub-quadratic attention; encoder-only archs have no
+    decode step (none assigned).  Returns (runnable, reason-if-skipped)."""
+    if shape_name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, ("full O(L²) attention at 524k context — skipped by "
+                       "design (DESIGN.md §4); run for SSM/hybrid archs only")
+    return True, ""

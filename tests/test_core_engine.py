@@ -1,0 +1,174 @@
+"""End-to-end behaviour tests for the paper's runtime system."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DynasparseEngine, SparseCOO, VCK5000, TPUV5E
+from repro.core.analyzer import analyze_kernel, force_queue
+from repro.core.partition import make_tasks
+from repro.core.perfmodel import (TaskShape, t_dense, t_spdmm, t_spmm,
+                                  t_sparse, flops, data_count)
+from repro.core.scheduler import simulate
+from repro.core import sparsity
+
+RNG = np.random.default_rng(7)
+
+
+def _coo(m, n, nnz, seed=0):
+    rng = np.random.default_rng(seed)
+    # sample without replacement: adjacency matrices have no duplicate edges
+    flat = np.sort(rng.choice(m * n, size=nnz, replace=False))
+    rows = (flat // n).astype(np.int32)
+    cols = (flat % n).astype(np.int32)
+    vals = rng.normal(size=nnz).astype(np.float32)
+    return SparseCOO((m, n), jnp.asarray(rows), jnp.asarray(cols),
+                     jnp.asarray(vals))
+
+
+# ------------------------------------------------------------- perf model
+def test_perfmodel_table1_closed_forms():
+    """Check the Table I formulas verbatim on VCK5000 constants."""
+    task = TaskShape(m=512, n=512, d=64, alpha_x=0.01, alpha_y=1.0)
+    hw = VCK5000
+    macs = 512 * 512 * 64
+    # GEMM: mnd / (f_AIE * N_AIE * beta)
+    expect_dense = macs / (1e9 * 128 * 8)
+    got = t_dense(task, hw)
+    assert got >= expect_dense  # memory bound can only increase it
+    compute_only = macs / (hw.f_dense * hw.dense_macs_per_cycle)
+    assert np.isclose(compute_only, expect_dense)
+    # SpDMM: alpha_min * mnd / (f_PL * p * q)
+    expect_spdmm = 0.01 * macs / (297e6 * 32)
+    got_compute = 0.01 * macs / (hw.f_sparse * hw.spdmm_macs_per_cycle)
+    assert np.isclose(got_compute, expect_spdmm)
+    # SpMM: alpha_X*alpha_Y*mnd / (f_PL * p)
+    expect_spmm = 0.01 * 1.0 * macs / (297e6 * 8)
+    got_spmm = 0.01 * 1.0 * macs / (hw.f_sparse * hw.spmm_macs_per_cycle)
+    assert np.isclose(got_spmm, expect_spmm)
+
+
+def test_analyzer_prefers_sparse_engine_for_sparse_tasks():
+    """α→0 ⇒ sparse queue; α→1 ⇒ dense queue (the paper's core decision)."""
+    part = make_tasks("k", 1024, 1024, 128, [0.001, 1.0], [1.0], 512, 128)
+    stq, dtq = analyze_kernel(part, VCK5000)
+    by_alpha = {t.shape.alpha_x: t for t in part.tasks}
+    assert by_alpha[0.001].queue == "STQ"
+    assert by_alpha[1.0].queue == "DTQ"
+    assert len(stq) + len(dtq) == 2
+
+
+def test_spmm_beats_spdmm_when_both_sparse():
+    t = TaskShape(m=512, n=512, d=512, alpha_x=0.01, alpha_y=0.01)
+    ts, prim = t_sparse(t, VCK5000)
+    # SpMM work: 1e-4*mnd/8 < SpDMM work: 1e-2*mnd/32
+    assert prim == "SpMM"
+    t2 = TaskShape(m=512, n=512, d=512, alpha_x=0.01, alpha_y=1.0)
+    _, prim2 = t_sparse(t2, VCK5000)
+    assert prim2 == "SpDMM"
+
+
+def test_flops_and_data_accounting_monotone():
+    t = TaskShape(m=256, n=256, d=64, alpha_x=0.1, alpha_y=0.5)
+    assert flops(t, "SpMM") <= flops(t, "SpDMM") <= flops(t, "GEMM")
+    assert data_count(t, "SpDMM") <= data_count(t, "GEMM")
+
+
+# ------------------------------------------------------------- scheduler
+def test_scheduler_balances_sparse_units():
+    # α must be below the engine-ratio break-even (~0.0093 on VCK5000:
+    # AIE 1024 MAC/cy @1GHz vs one ALU array 32 MAC/cy @297MHz) to land in STQ
+    part = make_tasks("k", 8 * 256, 1024, 128, [0.001] * 8, [1.0], 256, 128)
+    stq, dtq = analyze_kernel(part, VCK5000)
+    assert len(stq) == 8 and not dtq
+    rep = simulate(stq, dtq, VCK5000)
+    # 8 equal tasks over 8 ALU arrays: makespan ≈ one task (or memory bound)
+    one = stq[0].t_sparse
+    assert rep.makespan <= max(one * 1.01, rep.memory_time)
+
+
+def test_scheduler_overlaps_queues():
+    part = make_tasks("k", 2 * 256, 1024, 128, [0.001, 1.0], [1.0], 256, 128)
+    stq, dtq = analyze_kernel(part, VCK5000)
+    rep = simulate(stq, dtq, VCK5000)
+    serial = sum(t.t_assigned for t in stq + dtq)
+    assert rep.makespan <= serial  # PL ∥ AIE overlap
+
+
+def test_dynamic_beats_forced_baselines():
+    """The paper's headline: dynamic mapping ≤ PL-only and ≤ AIE-only."""
+    part_args = ("k", 4 * 256, 2048, 128, [0.001, 0.01, 0.5, 1.0], [1.0],
+                 256, 128)
+    stq, dtq = analyze_kernel(make_tasks(*part_args), VCK5000)
+    dyn = simulate(stq, dtq, VCK5000).makespan
+    s_stq, s_dtq = force_queue(make_tasks(*part_args), VCK5000, "STQ")
+    pl_only = simulate(s_stq, s_dtq, VCK5000).makespan
+    d_stq, d_dtq = force_queue(make_tasks(*part_args), VCK5000, "DTQ")
+    aie_only = simulate(d_stq, d_dtq, VCK5000).makespan
+    assert dyn <= pl_only * 1.0001
+    assert dyn <= aie_only * 1.0001
+
+
+# ------------------------------------------------------------- sparsity
+def test_stripe_density_exact():
+    x = np.zeros((64, 32), np.float32)
+    x[:16] = 1.0
+    d = np.asarray(sparsity.stripe_density(jnp.asarray(x), 16, axis=0))
+    np.testing.assert_allclose(d, [1.0, 0.0, 0.0, 0.0])
+    dc = np.asarray(sparsity.stripe_density(jnp.asarray(x), 8, axis=1))
+    np.testing.assert_allclose(dc, [0.25] * 4)
+
+
+def test_stripe_density_ragged_tail():
+    x = np.ones((50, 10), np.float32)
+    d = np.asarray(sparsity.stripe_density(jnp.asarray(x), 16, axis=0))
+    np.testing.assert_allclose(d, [1.0, 1.0, 1.0, 1.0])
+
+
+def test_coo_row_stripe_density_matches_dense():
+    a = _coo(100, 80, 400, seed=3)
+    dense = a.todense()
+    want = (dense != 0).reshape(4, 25, 80).sum(axis=(1, 2)) / (25 * 80)
+    got = a.row_stripe_density(25)
+    np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+# ------------------------------------------------------------- engine e2e
+@pytest.mark.parametrize("mode", ["dynamic", "sparse_only", "dense_only"])
+def test_engine_result_mode_invariant(mode):
+    a = _coo(128, 128, 300, seed=11)
+    h = RNG.normal(size=(128, 24)).astype(np.float32)
+    eng = DynasparseEngine(mode=mode, tile_m=32, tile_n=8)
+    z, rep = eng.matmul(a, jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(z), a.todense() @ h, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_engine_literal_equals_fast_path():
+    a = _coo(96, 96, 200, seed=13)
+    h = (RNG.normal(size=(96, 16)) * (RNG.uniform(size=(96, 16)) < 0.4)
+         ).astype(np.float32)
+    fast = DynasparseEngine(tile_m=32, tile_n=8)
+    lit = DynasparseEngine(tile_m=32, tile_n=8, literal=True)
+    z1, _ = fast.matmul(a, jnp.asarray(h))
+    z2, _ = lit.matmul(a, jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_engine_report_accumulates():
+    eng = DynasparseEngine(tile_m=32, tile_n=8)
+    h = RNG.normal(size=(64, 16)).astype(np.float32)
+    w = RNG.normal(size=(16, 8)).astype(np.float32)
+    eng.matmul(jnp.asarray(h), jnp.asarray(w), name="k1")
+    eng.matmul(jnp.asarray(h), jnp.asarray(w), name="k2")
+    assert len(eng.report.kernels) == 2
+    assert eng.report.hardware_time > 0
+    tot = eng.report.total
+    assert tot.flops_dense_equiv == pytest.approx(2 * 2 * 64 * 16 * 8)
+
+
+def test_tpu_hw_model_prefers_dense_above_block_density_threshold():
+    t_sparse_low = TaskShape(2048, 2048, 2048, alpha_x=0.05, alpha_y=1.0)
+    t_sparse_high = TaskShape(2048, 2048, 2048, alpha_x=0.95, alpha_y=1.0)
+    assert t_spdmm(t_sparse_low, TPUV5E) < t_dense(t_sparse_low, TPUV5E)
+    assert t_spdmm(t_sparse_high, TPUV5E) > t_dense(t_sparse_high, TPUV5E) * 0.9

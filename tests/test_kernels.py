@@ -1,0 +1,165 @@
+"""Per-kernel allclose validation against the pure-jnp oracles.
+
+All Pallas kernels run in interpret mode on CPU (TPU is the target).
+Shapes/dtypes are swept; hypothesis drives random sparsity structure.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.formats import pack_blockcsr
+
+jax.config.update("jax_enable_x64", False)
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(m, n, dtype, density=1.0, block_mask=None, block=None):
+    x = RNG.normal(size=(m, n)).astype(np.float32)
+    if density < 1.0 and block_mask is None:
+        mask = RNG.uniform(size=(m, n)) < density
+        x = x * mask
+    if block_mask is not None:
+        bm = np.kron(block_mask, np.ones((block, block)))[:m, :n]
+        x = x * bm
+    return x.astype(dtype)
+
+
+TOL = {np.float32: 2e-5, jnp.bfloat16: 2e-1}
+
+
+# ---------------------------------------------------------------- GEMM
+@pytest.mark.parametrize("m,k,n", [(8, 8, 8), (32, 16, 24), (128, 128, 128),
+                                   (100, 60, 36), (256, 128, 64)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_gemm_matches_ref(m, k, n, dtype):
+    x = _rand(m, k, dtype)
+    y = _rand(k, n, dtype)
+    got = ops.gemm(jnp.asarray(x), jnp.asarray(y), bm=32, bn=32, bk=32,
+                   interpret=True, out_dtype=jnp.float32)
+    want = ref.gemm_ref(jnp.asarray(x), jnp.asarray(y), out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=TOL[dtype], atol=TOL[dtype] * 10)
+
+
+def test_gemm_block_shape_sweep():
+    x = _rand(64, 48, np.float32)
+    y = _rand(48, 80, np.float32)
+    want = np.asarray(ref.gemm_ref(jnp.asarray(x), jnp.asarray(y)))
+    for b in (8, 16, 64, 128):
+        got = ops.gemm(jnp.asarray(x), jnp.asarray(y), bm=b, bn=b, bk=b,
+                       interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------------- SpDMM
+@pytest.mark.parametrize("block", [8, 16])
+@pytest.mark.parametrize("density", [0.0, 0.1, 0.5, 1.0])
+def test_spdmm_block_density_sweep(block, density):
+    m, k, n = 4 * block, 6 * block, 3 * block
+    nrb, ncb = m // block, k // block
+    block_mask = (RNG.uniform(size=(nrb, ncb)) < density).astype(np.float32)
+    a_dense = _rand(m, k, np.float32, block_mask=block_mask, block=block)
+    y = _rand(k, n, np.float32)
+    a = pack_blockcsr(a_dense, block)
+    got = ops.spdmm(a, jnp.asarray(y), bn=block, interpret=True)
+    want = a_dense.astype(np.float32) @ y
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-4)
+
+
+def test_spdmm_ragged_shapes():
+    # logical shapes not multiples of block
+    block = 16
+    a_dense = _rand(50, 70, np.float32, density=0.2)
+    y = _rand(70, 36, np.float32)
+    a = pack_blockcsr(a_dense, block)
+    got = ops.spdmm(a, jnp.asarray(y), bn=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), a_dense @ y, rtol=2e-5,
+                               atol=2e-4)
+
+
+def test_spdmm_capacity_padding_is_noop():
+    block = 8
+    a_dense = _rand(32, 32, np.float32, density=0.3)
+    y = _rand(32, 16, np.float32)
+    a0 = pack_blockcsr(a_dense, block)
+    a1 = pack_blockcsr(a_dense, block, capacity=a0.stored_blocks + 7)
+    g0 = ops.spdmm(a0, jnp.asarray(y), bn=8, interpret=True)
+    g1 = ops.spdmm(a1, jnp.asarray(y), bn=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_spdmm_dtypes(dtype):
+    block = 8
+    a_dense = _rand(24, 40, dtype, density=0.4)
+    y = _rand(40, 24, dtype)
+    a = pack_blockcsr(a_dense, block)
+    got = ops.spdmm(a, jnp.asarray(y), bn=8, interpret=True)
+    want = np.asarray(a_dense, np.float32) @ np.asarray(y, np.float32)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=TOL[dtype],
+                               atol=TOL[dtype] * 10)
+
+
+# ---------------------------------------------------------------- SpMM
+@pytest.mark.parametrize("da,dy", [(0.0, 0.5), (0.2, 0.2), (0.5, 1.0),
+                                   (1.0, 1.0), (1.0, 0.0)])
+def test_spmm_density_sweep(da, dy):
+    block = 8
+    m, k, n = 3 * block, 4 * block, 2 * block
+    am = (RNG.uniform(size=(m // block, k // block)) < da).astype(np.float32)
+    ym = (RNG.uniform(size=(k // block, n // block)) < dy).astype(np.float32)
+    a_dense = _rand(m, k, np.float32, block_mask=am, block=block)
+    y_dense = _rand(k, n, np.float32, block_mask=ym, block=block)
+    a = pack_blockcsr(a_dense, block)
+    y = pack_blockcsr(y_dense, block)
+    got = ops.spmm(a, y, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), a_dense @ y_dense,
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_spmm_ragged():
+    block = 8
+    a_dense = _rand(20, 28, np.float32, density=0.3)
+    y_dense = _rand(28, 12, np.float32, density=0.3)
+    a = pack_blockcsr(a_dense, block)
+    y = pack_blockcsr(y_dense, block)
+    got = ops.spmm(a, y, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), a_dense @ y_dense,
+                               rtol=2e-5, atol=2e-4)
+
+
+# ---------------------------------------------------------------- property
+@settings(max_examples=25, deadline=None)
+@given(
+    nrb=st.integers(1, 4), ncb=st.integers(1, 4), nnb=st.integers(1, 3),
+    da=st.floats(0.0, 1.0), dy=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_sparse_kernels_match_dense(nrb, ncb, nnb, da, dy, seed):
+    """Invariant: spdmm/spmm equal the dense product for ANY block pattern."""
+    block = 8
+    rng = np.random.default_rng(seed)
+    m, k, n = nrb * block, ncb * block, nnb * block
+    am = (rng.uniform(size=(nrb, ncb)) < da).astype(np.float32)
+    ym = (rng.uniform(size=(ncb, nnb)) < dy).astype(np.float32)
+    a_dense = (rng.normal(size=(m, k)) * np.kron(am, np.ones((block, block)))
+               ).astype(np.float32)
+    y_dense = (rng.normal(size=(k, n)) * np.kron(ym, np.ones((block, block)))
+               ).astype(np.float32)
+    a = pack_blockcsr(a_dense, block)
+    y_sp = pack_blockcsr(y_dense, block)
+    want = a_dense @ y_dense
+    got_spdmm = ops.spdmm(a, jnp.asarray(y_dense), bn=8, interpret=True)
+    got_spmm = ops.spmm(a, y_sp, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_spdmm), want, rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(got_spmm), want, rtol=2e-4, atol=2e-3)
+
+
+def test_blockcsr_roundtrip():
+    a_dense = _rand(40, 24, np.float32, density=0.25)
+    a = pack_blockcsr(a_dense, 8)
+    np.testing.assert_allclose(np.asarray(a.todense()), a_dense, atol=0)

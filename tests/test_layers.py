@@ -1,0 +1,235 @@
+"""Layer-level numerics: flash attention vs naive softmax, MoE vs per-token
+reference, RoPE properties, roofline HLO parser."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, flash_attention
+from repro.models.ffn import init_moe_ffn, moe_ffn
+
+RNG = np.random.default_rng(42)
+
+
+def _naive_attention(q, k, v, causal=True, window=None):
+    B, Lq, Hq, Dh = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(np.float32).reshape(B, Lq, Hkv, G, Dh)
+    s = np.einsum("bqhgd,bkhd->bhgqk", qf, np.asarray(k, np.float32))
+    s /= np.sqrt(Dh)
+    qpos = np.arange(Lq)[:, None]
+    kpos = np.arange(Lk)[None, :]
+    mask = np.ones((Lq, Lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bhgqk,bkhd->bqhgd", p, np.asarray(v, np.float32))
+    return out.reshape(B, Lq, Hq, Dh)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 24)])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 1), (8, 2)])
+def test_flash_attention_matches_naive(causal, window, hq, hkv):
+    B, L, Dh = 2, 40, 16
+    q = RNG.normal(size=(B, L, hq, Dh)).astype(np.float32)
+    k = RNG.normal(size=(B, L, hkv, Dh)).astype(np.float32)
+    v = RNG.normal(size=(B, L, hkv, Dh)).astype(np.float32)
+    got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=causal, window=window, q_chunk=16,
+                          kv_chunk=8)
+    want = _naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_causal_skip_equivalent():
+    """The §Perf flash_skip variant must be numerically identical."""
+    B, L, H, Dh = 1, 64, 2, 8
+    q = RNG.normal(size=(B, L, H, Dh)).astype(np.float32)
+    k = RNG.normal(size=(B, L, H, Dh)).astype(np.float32)
+    v = RNG.normal(size=(B, L, H, Dh)).astype(np.float32)
+    a = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=True, q_chunk=16, kv_chunk=16)
+    b = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        causal=True, q_chunk=16, kv_chunk=16,
+                        causal_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(lq=st.integers(1, 33), lk=st.integers(1, 33), seed=st.integers(0, 999))
+def test_property_flash_attention_ragged(lq, lk, seed):
+    """Invariant: flash == naive for arbitrary (non-chunk-aligned) lengths,
+    cross-attention style."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(1, lq, 2, 8)).astype(np.float32)
+    k = rng.normal(size=(1, lk, 2, 8)).astype(np.float32)
+    v = rng.normal(size=(1, lk, 2, 8)).astype(np.float32)
+    got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=False, q_chunk=8, kv_chunk=8)
+    want = _naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
+
+
+# ----------------------------------------------------------------- MoE
+def _naive_moe(p, x, cfg):
+    """Per-token loop reference (no capacity drops)."""
+    T, D = x.shape
+    logits = x @ np.asarray(p["router"], np.float32)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = np.zeros((T, D), np.float32)
+    K = cfg.top_k
+    for t in range(T):
+        top = np.argsort(-probs[t])[:K]
+        w = probs[t][top] / probs[t][top].sum()
+        for e, wi in zip(top, w):
+            g = x[t] @ np.asarray(p["w_gate"][e], np.float32)
+            u = x[t] @ np.asarray(p["w_up"][e], np.float32)
+            silu = g / (1 + np.exp(-g))
+            out[t] += wi * ((silu * u) @ np.asarray(p["w_down"][e], np.float32))
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        g = x @ np.asarray(sp["w_gate"], np.float32)
+        u = x @ np.asarray(sp["w_up"], np.float32)
+        out += (g / (1 + np.exp(-g)) * u) @ np.asarray(sp["w_down"], np.float32)
+    return out
+
+
+def test_moe_matches_per_token_reference():
+    cfg = ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab=32, ffn="moe", n_experts=4,
+        n_shared_experts=1, top_k=2, moe_d_ff=8,
+        capacity_factor=8.0,  # no drops
+        dtype="float32")
+    p = init_moe_ffn(jax.random.PRNGKey(0), cfg)
+    x = RNG.normal(size=(1, 12, 16)).astype(np.float32) * 0.5
+    got = moe_ffn(p, jnp.asarray(x), cfg)
+    want = _naive_moe(p, x[0], cfg)
+    np.testing.assert_allclose(np.asarray(got)[0], want, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With capacity_factor=1.0 some tokens drop — output stays finite and
+    shared-expert path still contributes."""
+    cfg = ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=8, n_heads=2,
+        n_kv_heads=2, d_ff=0, vocab=32, ffn="moe", n_experts=4,
+        n_shared_experts=0, top_k=2, moe_d_ff=8, capacity_factor=1.0,
+        dtype="float32")
+    p = init_moe_ffn(jax.random.PRNGKey(1), cfg)
+    x = RNG.normal(size=(2, 16, 8)).astype(np.float32)
+    out = moe_ffn(p, jnp.asarray(x), cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ----------------------------------------------------------------- RoPE
+def test_rope_preserves_inner_products_under_shift():
+    """RoPE invariant: <rope(q,i), rope(k,j)> depends only on i-j."""
+    Dh = 16
+    q = RNG.normal(size=(1, 1, 1, Dh)).astype(np.float32)
+    k = RNG.normal(size=(1, 1, 1, Dh)).astype(np.float32)
+
+    def dot_at(pi, pj):
+        qr = apply_rope(jnp.asarray(q), jnp.asarray([[pi]]), 1e4)
+        kr = apply_rope(jnp.asarray(k), jnp.asarray([[pj]]), 1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-3
+    assert abs(dot_at(5, 5) - dot_at(0, 0)) < 1e-3
+
+
+def test_mrope_sections_match_1d_when_positions_equal():
+    """With all three position streams equal, M-RoPE == classic RoPE."""
+    Dh = 16
+    x = RNG.normal(size=(1, 4, 2, Dh)).astype(np.float32)
+    pos1 = jnp.arange(4)[None]
+    pos3 = jnp.repeat(pos1[..., None], 3, axis=-1)
+    a = apply_rope(jnp.asarray(x), pos1, 1e4)
+    b = apply_rope(jnp.asarray(x), pos3, 1e4, sections=(2, 3, 3))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ----------------------------------------------------------------- roofline
+def test_hlo_cost_loop_awareness():
+    """flops of a scanned matmul must scale with trip count."""
+    from repro.launch.roofline import hlo_cost
+
+    def once(x, w):
+        return x @ w
+
+    def scanned(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jnp.ones((32, 32))
+    w = jnp.ones((32, 32))
+    h1 = jax.jit(once).lower(x, w).compile().as_text()
+    h7 = jax.jit(scanned).lower(x, w).compile().as_text()
+    c1 = hlo_cost(h1)
+    c7 = hlo_cost(h7)
+    assert c1["flops"] == pytest.approx(2 * 32**3, rel=0.01)
+    assert c7["flops"] == pytest.approx(7 * 2 * 32**3, rel=0.01)
+
+
+def test_flash_vjp_forward_and_grads_match_naive():
+    """Custom-VJP flash (fwd AND grads) == differentiable reference."""
+    from repro.models.layers import flash_attention_vjp
+    B, L, Hq, Hkv, Dh = 1, 36, 4, 2, 8
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(B, L, Hq, Dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, L, Hkv, Dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, L, Hkv, Dh)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(B, L, Hq, Dh)).astype(np.float32))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(flash_attention_vjp(q, k, v, causal=True, q_chunk=8,
+                                           kv_chunk=8) * w)
+
+    def loss_ref(q, k, v):
+        G = Hq // Hkv
+        qf = q.reshape(B, L, Hkv, G, Dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k) / np.sqrt(Dh)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, L, Hq, Dh)
+        return jnp.sum(o * w)
+
+    f0, g0 = jax.value_and_grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    f1, g1 = jax.value_and_grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    assert abs(float(f0) - float(f1)) < 1e-2
+    for a, b in zip(g0, g1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_flash_vjp_causal_skip_grads():
+    from repro.models.layers import flash_attention_vjp
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 8)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 8)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 8)).astype(np.float32))
+
+    def loss(skip):
+        def f(q, k, v):
+            return jnp.sum(flash_attention_vjp(
+                q, k, v, causal=True, q_chunk=8, kv_chunk=8,
+                causal_skip=skip) ** 2)
+        return jax.grad(f)(q, k, v)
+
+    a = loss(False)
+    b = loss(True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,89 @@
+"""Regression guard for the §Perf optimization flags: every variant must
+lower + compile and stay numerically consistent with the baseline on
+reduced configs (subprocess with 8 host devices)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, dataclasses, json
+    from repro.configs import ARCHS
+    from repro.configs.reduced import reduce_config
+    from repro.models.registry import build_model
+    from repro.launch.mesh import make_mesh_for_devices
+    from repro.launch.steps import init_state, make_train_step
+    from repro.distributed.sharding import params_shardings, batch_shardings
+    from repro.optim.adamw import AdamWConfig
+
+    out = {}
+    rng = np.random.default_rng(0)
+    mesh = make_mesh_for_devices(8, model_parallel=2)
+
+    def run(arch, **cfg_over):
+        cfg = dataclasses.replace(reduce_config(ARCHS[arch]), microbatches=2,
+                                  remat="full", **cfg_over)
+        bundle = build_model(cfg)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab, (8, 32)), jnp.int32)}
+        step = make_train_step(bundle, AdamWConfig(lr=1e-3, warmup_steps=0))
+        with mesh:
+            state = init_state(bundle)
+            state = dict(state, params=jax.device_put(
+                state["params"], params_shardings(state["params"], mesh)))
+            b_sh = batch_shardings(batch, mesh)
+            _, m = jax.jit(step, in_shardings=(None, b_sh))(state, batch)
+        return float(m["loss"])
+
+    # same batch ordering per variant pair
+    rng = np.random.default_rng(0)
+    base = run("phi3-mini-3.8b")
+    rng = np.random.default_rng(0)
+    vjp = run("phi3-mini-3.8b", flash_vjp=True, flash_causal_skip=True)
+    out["phi3_base"] = base
+    out["phi3_vjp_skip"] = vjp
+
+    rng = np.random.default_rng(0)
+    moe_b = run("deepseek-v2-lite-16b")
+    rng = np.random.default_rng(0)
+    moe_s = run("deepseek-v2-lite-16b", moe_dispatch_shard=True)
+    out["moe_base"] = moe_b
+    out["moe_shard"] = moe_s
+
+    rng = np.random.default_rng(0)
+    out["seq_shard"] = run("qwen2.5-3b", seq_shard=True)
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][-1]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_flash_vjp_skip_loss_matches_baseline(results):
+    assert results["phi3_base"] == pytest.approx(results["phi3_vjp_skip"],
+                                                 rel=1e-2)
+
+
+def test_moe_dispatch_shard_loss_matches_baseline(results):
+    assert results["moe_base"] == pytest.approx(results["moe_shard"],
+                                                rel=1e-2)
+
+
+def test_seq_shard_compiles_and_is_finite(results):
+    import math
+    assert math.isfinite(results["seq_shard"])

@@ -1,0 +1,131 @@
+"""Multi-device SPMD tests — run in a subprocess with 8 host devices so the
+main test process keeps seeing 1 device (per the dry-run isolation rule)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, dataclasses, json
+    from repro.configs import ARCHS
+    from repro.configs.reduced import reduce_config
+    from repro.models.registry import build_model
+    from repro.launch.mesh import make_mesh_for_devices
+    from repro.launch.steps import init_state, make_train_step
+    from repro.distributed.sharding import params_shardings, batch_shardings
+    from repro.optim.adamw import AdamWConfig
+
+    out = {}
+
+    # ---- 1) sharded train step == single-device train step (phi3 reduced)
+    cfg = dataclasses.replace(reduce_config(ARCHS["phi3-mini-3.8b"]),
+                              d_model=64, n_layers=2, microbatches=2)
+    bundle = build_model(cfg)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)),
+                                   jnp.int32)}
+    step = make_train_step(bundle, AdamWConfig(lr=1e-3, warmup_steps=0))
+
+    state1 = init_state(bundle)
+    s1, m1 = jax.jit(step)(state1, batch)
+
+    mesh = make_mesh_for_devices(8, model_parallel=2)
+    with mesh:
+        state2 = init_state(bundle)
+        p_sh = params_shardings(state2["params"], mesh)
+        b_sh = batch_shardings(batch, mesh)
+        state2 = dict(state2,
+                      params=jax.device_put(state2["params"], p_sh))
+        s2, m2 = jax.jit(step, in_shardings=(None, b_sh))(state2, batch)
+    out["loss_single"] = float(m1["loss"])
+    out["loss_sharded"] = float(m2["loss"])
+    w1 = np.asarray(jax.tree.leaves(s1["params"])[0], np.float32)
+    w2 = np.asarray(jax.tree.leaves(s2["params"])[0], np.float32)
+    out["params_maxdiff"] = float(np.abs(w1 - w2).max())
+
+    # ---- 2) pipeline parallelism equivalence
+    from repro.distributed.pipeline import pipeline_apply
+    pmesh = jax.make_mesh((4,), ("pipe",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+    ws = jnp.asarray(rng.normal(size=(4, 16, 16)).astype(np.float32)) * 0.5
+    xs = jnp.asarray(rng.normal(size=(6, 3, 16)).astype(np.float32))
+    got = pipeline_apply(pmesh, stage_fn, ws, xs)
+    want = xs
+    for s in range(4):
+        want = jnp.tanh(want @ ws[s])
+    out["pipe_maxdiff"] = float(jnp.abs(got - want).max())
+
+    # ---- 3) int8 psum via shard_map
+    from repro.optim.compression import psum8
+    from jax.sharding import PartitionSpec as P
+    dmesh = jax.make_mesh((8,), ("data",),
+                          axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    f = jax.shard_map(lambda v: psum8(v, "data"), mesh=dmesh,
+                      in_specs=P("data"), out_specs=P(), check_vma=False)
+    got8 = np.asarray(f(x))[0]
+    want8 = np.asarray(x.sum(0))
+    # worst-case quantization budget: n_ranks x 0.5 ulp x shared scale
+    budget = 8 * 0.5 * float(np.abs(np.asarray(x)).max()) / 127.0
+    out["psum8_err_over_budget"] = float(np.abs(got8 - want8).max() / budget)
+
+    # ---- 4) elastic: restore a checkpoint onto a SMALLER mesh
+    from repro.checkpoint import CheckpointManager
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(3, s2, blocking=True)
+        small = make_mesh_for_devices(4, model_parallel=2)
+        with small:
+            sh_small = {"params": params_shardings(state2["params"], small),
+                        "opt": None}
+            stp, restored = mgr.restore(
+                {"params": s2["params"], "opt": s2["opt"]},
+                shardings={"params": sh_small["params"], "opt": None})
+        w3 = np.asarray(jax.tree.leaves(restored["params"])[0], np.float32)
+        out["elastic_maxdiff"] = float(np.abs(w3 - w2).max())
+        out["elastic_ndev"] = len(set(
+            d for l in jax.tree.leaves(restored["params"])
+            for d in l.sharding.device_set))
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def spmd_results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.abspath(
+                   os.path.join(os.path.dirname(__file__), "..", "src")))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][-1]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_sharded_training_matches_single_device(spmd_results):
+    r = spmd_results
+    assert abs(r["loss_single"] - r["loss_sharded"]) < 1e-3
+    # bf16 compute reassociates across shards; tolerance reflects that
+    assert r["params_maxdiff"] < 5e-3
+
+
+def test_pipeline_parallel_matches_serial(spmd_results):
+    assert spmd_results["pipe_maxdiff"] < 1e-5
+
+
+def test_int8_psum_close_to_fp32(spmd_results):
+    assert spmd_results["psum8_err_over_budget"] < 1.0
+
+
+def test_elastic_reshard_preserves_values(spmd_results):
+    assert spmd_results["elastic_maxdiff"] == 0.0
+    assert spmd_results["elastic_ndev"] == 4
