@@ -8,9 +8,11 @@ primitives (Pallas GEMM / SpDMM / SpMM).
 from repro.core.engine import DynasparseEngine, EngineReport
 from repro.core.perfmodel import (HardwareModel, TaskShape, VCK5000,
                                   VCK5000_384, TPUV5E, t_dense, t_sparse)
+from repro.core.plancache import KernelPlan, PlanCache
 from repro.core.primitives import SparseCOO
 
 __all__ = [
     "DynasparseEngine", "EngineReport", "HardwareModel", "TaskShape",
     "VCK5000", "VCK5000_384", "TPUV5E", "t_dense", "t_sparse", "SparseCOO",
+    "KernelPlan", "PlanCache",
 ]

@@ -52,6 +52,14 @@ class KernelPartition:
     def n_col_tiles(self) -> int:
         return -(-self.N // self.tile_n)
 
+    def row_extent(self, i: int) -> int:
+        """Logical row count of row-tile ``i`` (ragged tail aware)."""
+        return min(self.tile_m, self.M - i * self.tile_m)
+
+    def col_extent(self, j: int) -> int:
+        """Logical column count of col-tile ``j`` (ragged tail aware)."""
+        return min(self.tile_n, self.N - j * self.tile_n)
+
 
 def make_tasks(
     name: str,

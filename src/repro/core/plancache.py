@@ -1,0 +1,180 @@
+"""PlanCache — amortized Analyzer/Scheduler preprocessing (plan/execute split).
+
+The paper's runtime performs its preprocessing (density measurement, 2-D task
+partitioning, Analyzer queue assignment, data-format packing) ONCE per kernel
+on the APU and then drains the queues on the PL/AIE; Dynasparse amortizes the
+same work across layers, and GraphAGILE compiles the kernel sequence ahead of
+execution.  This module is the TPU-runtime analogue: everything derived from a
+*static* operand's sparsity structure is computed once and reused across
+layers and repeated inference calls (the serving path).
+
+Two cache levels, both LRU-bounded:
+
+- **structure level** (keyed by the operand's sparsity fingerprint + tile
+  geometry): row-stripe densities, and — for the literal execution path — the
+  densified operand plus its packed BlockCSR row-stripes.  Shared by every
+  kernel that multiplies the same adjacency, regardless of the dense operand's
+  width (layer-1 aggregation at hidden width and layer-2 aggregation at class
+  width pack the adjacency exactly once).
+
+- **plan level** (structure key + full kernel geometry + engine mode): the
+  task grid, STQ/DTQ assignment, and simulated ``ScheduleReport``.  A repeated
+  kernel (same adjacency, same output width — e.g. every serving request)
+  skips measurement, analysis and simulation entirely.
+
+Only kernels whose X operand is ``SparseCOO`` are cached: its structure is
+static by construction (the graph), and the O(nnz) fingerprint is far cheaper
+than the preprocessing it avoids.  Kernels with a dense X (activations) are
+planned fresh every call.  Deliberate semantics of a plan hit: the DENSE
+operand Y's column densities were measured on the FIRST call and are assumed
+representative on reuse — that is exactly the amortization (one assignment
+per kernel, queues drained without re-analysis; Alg. 4 / Dynasparse), and it
+is what lets layer-2 aggregation and every serving request skip measurement.
+If a workload's feature density shifts drastically between requests, drop the
+cache (``engine.cache.clear()``) or use a fresh engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Callable
+
+import numpy as np
+
+from repro.core.partition import KernelPartition, Task
+from repro.core.scheduler import ScheduleReport
+from repro.core.primitives import SparseCOO
+from repro.kernels.formats import BlockCSR
+
+
+def coo_fingerprint(x: SparseCOO) -> str:
+    """Content digest of a COO matrix.  Values are included alongside the
+    coordinates: the task assignment depends only on WHERE the nonzeros are,
+    but the cached packed BlockCSR blocks carry the values themselves, so two
+    matrices with one pattern and different values must not share an entry.
+
+    Memoized on the instance so repeated calls with the same object are O(1);
+    the memo is tagged with the component arrays' identities, so reassigning
+    ``x.rows``/``x.cols``/``x.vals`` invalidates it (jax arrays themselves
+    are immutable, so identity is sufficient)."""
+    arr_ids = (id(x.rows), id(x.cols), id(x.vals))
+    memo = getattr(x, "_plan_fp", None)
+    if memo is not None and memo[0] == arr_ids:
+        return memo[1]
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.ascontiguousarray(np.asarray(x.rows)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(x.cols)).tobytes())
+    h.update(np.ascontiguousarray(np.asarray(x.vals)).tobytes())
+    h.update(repr((tuple(x.shape), x.tag)).encode())
+    fp = h.hexdigest()
+    try:
+        x._plan_fp = (arr_ids, fp)
+    except Exception:  # frozen/slotted future variants: just recompute
+        pass
+    return fp
+
+
+@dataclasses.dataclass
+class CacheStats:
+    plan_hits: int = 0
+    plan_misses: int = 0
+    struct_hits: int = 0
+    struct_misses: int = 0
+    packs: int = 0       # structure packing events (densify + BlockCSR stripes)
+    analyzes: int = 0    # structure density analyses
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class KernelPlan:
+    """Everything ``DynasparseEngine.execute`` needs, decoupled from planning.
+
+    ``struct_key`` is set when the X operand is cacheable (static sparsity);
+    it addresses the packed-stripe entry used by the literal dispatch path.
+    """
+    part: KernelPartition
+    stq: list[Task]
+    dtq: list[Task]
+    report: ScheduleReport
+    row_density: np.ndarray
+    col_density: np.ndarray
+    struct_key: tuple | None = None
+
+
+@dataclasses.dataclass
+class StructureEntry:
+    """Packed form of a static operand at one (tile_m, block, eps) geometry."""
+    dense: object                     # densified operand, device-resident
+    stripes: dict[int, BlockCSR]      # row-stripe index -> packed BlockCSR
+
+
+class PlanCache:
+    """Structure-keyed LRU cache of kernel plans and packed operands."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._plans: OrderedDict[tuple, KernelPlan] = OrderedDict()
+        self._densities: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._structs: OrderedDict[tuple, StructureEntry] = OrderedDict()
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------- helpers
+    def _get(self, store: OrderedDict, key):
+        if key in store:
+            store.move_to_end(key)
+            return store[key]
+        return None
+
+    def _put(self, store: OrderedDict, key, value):
+        store[key] = value
+        store.move_to_end(key)
+        while len(store) > self.capacity:
+            store.popitem(last=False)
+
+    # ---------------------------------------------------------- plan level
+    def get_plan(self, key: tuple) -> KernelPlan | None:
+        plan = self._get(self._plans, key)
+        if plan is None:
+            self.stats.plan_misses += 1
+        else:
+            self.stats.plan_hits += 1
+        return plan
+
+    def put_plan(self, key: tuple, plan: KernelPlan) -> None:
+        self._put(self._plans, key, plan)
+
+    # ----------------------------------------------------- structure level
+    def row_density(self, key: tuple,
+                    compute: Callable[[], np.ndarray]) -> np.ndarray:
+        """Get-or-compute the per-row-stripe densities of a static operand."""
+        d = self._get(self._densities, key)
+        if d is not None:
+            self.stats.struct_hits += 1
+            return d
+        self.stats.struct_misses += 1
+        self.stats.analyzes += 1
+        d = np.asarray(compute())
+        self._put(self._densities, key, d)
+        return d
+
+    def structure(self, key: tuple,
+                  compute: Callable[[], StructureEntry]) -> StructureEntry:
+        """Get-or-compute the packed (dense + BlockCSR stripes) form."""
+        e = self._get(self._structs, key)
+        if e is not None:
+            self.stats.struct_hits += 1
+            return e
+        self.stats.struct_misses += 1
+        self.stats.packs += 1
+        e = compute()
+        self._put(self._structs, key, e)
+        return e
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self._densities.clear()
+        self._structs.clear()
+        self.stats = CacheStats()

@@ -60,10 +60,18 @@ class SparseCOO:
                   np.asarray(self.vals))
         return out
 
-    def row_stripe_density(self, tile_m: int) -> np.ndarray:
-        """α(X_{i,:}) per row-stripe, from nnz counts (host, O(nnz))."""
+    def row_stripe_density(self, tile_m: int, eps: float = 0.0) -> np.ndarray:
+        """α(X_{i,:}) per row-stripe, from nnz counts (host, O(nnz)).
+
+        ``eps > 0`` drops stored values with ``|v| <= eps`` from the count,
+        matching the dense :func:`repro.core.sparsity.stripe_density`
+        tolerance; ``eps == 0`` counts every stored entry (nnz semantics).
+        """
         n_stripes = -(-self.shape[0] // tile_m)
-        counts = np.bincount(np.asarray(self.rows) // tile_m,
+        rows = np.asarray(self.rows)
+        if eps > 0.0:
+            rows = rows[np.abs(np.asarray(self.vals)) > eps]
+        counts = np.bincount(rows // tile_m,
                              minlength=n_stripes).astype(np.float64)
         sizes = np.full(n_stripes, tile_m * self.shape[1], dtype=np.float64)
         tail = self.shape[0] - (n_stripes - 1) * tile_m

@@ -22,12 +22,15 @@ def density(x: jax.Array, eps: float = 0.0) -> jax.Array:
     return nz / x.size
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "axis"))
-def stripe_density(x: jax.Array, tile: int, axis: int = 0) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("tile", "axis", "eps"))
+def stripe_density(x: jax.Array, tile: int, axis: int = 0,
+                   eps: float = 0.0) -> jax.Array:
     """Density of each row-stripe (axis=0) or col-stripe (axis=1).
 
     Stripes are the task operands of Eq. 3: ``X_{i,:}`` / ``Y_{:,j}``.
-    Ragged tails count only logical elements.
+    Ragged tails count only logical elements.  ``eps`` is the same nonzero
+    tolerance as :func:`density`, so the Analyzer's task assignment and the
+    reported kernel density agree on near-zero (post-ReLU) values.
     """
     m = x.shape[axis]
     n_stripes = -(-m // tile)
@@ -37,30 +40,31 @@ def stripe_density(x: jax.Array, tile: int, axis: int = 0) -> jax.Array:
     xp = jnp.pad(x, widths)
     if axis == 0:
         xp = xp.reshape(n_stripes, tile, x.shape[1])
-        nz = jnp.sum(jnp.abs(xp) > 0, axis=(1, 2))
+        nz = jnp.sum(jnp.abs(xp) > eps, axis=(1, 2))
         sizes = jnp.full((n_stripes,), tile * x.shape[1])
         sizes = sizes.at[-1].set((m - (n_stripes - 1) * tile) * x.shape[1])
     else:
         xp = xp.reshape(x.shape[0], n_stripes, tile)
-        nz = jnp.sum(jnp.abs(xp) > 0, axis=(0, 2))
+        nz = jnp.sum(jnp.abs(xp) > eps, axis=(0, 2))
         sizes = jnp.full((n_stripes,), tile * x.shape[0])
         sizes = sizes.at[-1].set((m - (n_stripes - 1) * tile) * x.shape[0])
     return nz / sizes
 
 
-@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
-def tile_density(x: jax.Array, tile_m: int, tile_n: int) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "eps"))
+def tile_density(x: jax.Array, tile_m: int, tile_n: int,
+                 eps: float = 0.0) -> jax.Array:
     """(n_row_tiles, n_col_tiles) grid of per-tile densities."""
     m, n = x.shape
     nrt, nct = -(-m // tile_m), -(-n // tile_n)
     xp = jnp.pad(x, ((0, nrt * tile_m - m), (0, nct * tile_n - n)))
     xp = xp.reshape(nrt, tile_m, nct, tile_n)
-    nz = jnp.sum(jnp.abs(xp) > 0, axis=(1, 3))
+    nz = jnp.sum(jnp.abs(xp) > eps, axis=(1, 3))
     return nz / (tile_m * tile_n)
 
 
-def block_density(x: np.ndarray, block: int) -> float:
+def block_density(x: np.ndarray, block: int, eps: float = 0.0) -> float:
     """Fraction of non-zero B x B blocks — the TPU-native α (tile-level skip
     granularity; see DESIGN.md §2)."""
-    t = np.asarray(tile_density(jnp.asarray(x), block, block))
+    t = np.asarray(tile_density(jnp.asarray(x), block, block, eps=eps))
     return float(np.mean(t > 0))

@@ -95,6 +95,7 @@ def pack_blockcsr(
     *,
     capacity: int | None = None,
     dtype=None,
+    eps: float = 0.0,
 ) -> BlockCSR:
     """Pack a dense host array into ``BlockCSR``, skipping all-zero blocks.
 
@@ -103,6 +104,9 @@ def pack_blockcsr(
     point at the LAST block-row with ``first = 0`` — appended after the sorted
     real blocks they extend the final row's consecutive revisit run, which is
     required for output-buffer residency on real TPU grids.
+
+    ``eps`` is the nonzero tolerance: blocks whose magnitudes are all
+    ``<= eps`` are skipped (consistent with the Analyzer's density tolerance).
     """
     x = np.asarray(x)
     if x.ndim != 2:
@@ -113,12 +117,15 @@ def pack_blockcsr(
     padded = np.zeros((nrb * B, ncb * B), dtype=x.dtype)
     padded[:M, :K] = x
 
+    def _stored(blk):
+        return np.any(blk != 0) if eps == 0.0 else np.any(np.abs(blk) > eps)
+
     rows, cols, first, blocks = [], [], [], []
     for rb in range(nrb):
         row_has_block = False
         for cb in range(ncb):
             blk = padded[rb * B:(rb + 1) * B, cb * B:(cb + 1) * B]
-            if np.any(blk != 0):
+            if _stored(blk):
                 rows.append(rb)
                 cols.append(cb)
                 first.append(0 if row_has_block else 1)
@@ -152,57 +159,90 @@ def pack_blockcsr(
     )
 
 
-def spmm_triples(a: BlockCSR, y: BlockCSR) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Host-side pairing (the paper's Pairing Unit, Alg. 3 lines 3-5).
+def pair_block_triples(
+    a: BlockCSR,
+    y: BlockCSR,
+    *,
+    a_sentinel: int,
+    y_sentinel: int,
+    a_offset: int = 0,
+    y_offset: int = 0,
+    base_row: int = 0,
+    base_col: int = 0,
+    n_row_blocks: int | None = None,
+    n_col_blocks: int | None = None,
+) -> list[tuple[int, int, int, int]]:
+    """Block-level Pairing Unit (Alg. 3 lines 3-5), region-relocatable.
 
-    Computes the block-level intersection of A's block-rows with Y's
-    block-rows: each output block ``Z[jb, kb]`` receives one matmul per pair
-    ``(A[jb, ib], Y[ib, kb])`` where both blocks are stored.  Returns arrays
-    ``(a_ids, y_ids, out_rows, out_cols, first)`` sorted by output block, with
-    one zero-pair appended for every output block that receives no
-    contribution (so Pallas initializes it).  The zero pair indexes the
-    sentinel block appended by the SpMM wrapper at position ``stored_blocks``.
+    Intersects A's stored block-rows with Y's stored block-rows: each output
+    block ``Z[jb, kb]`` receives one ``(a_id, y_id)`` pair per stored pair
+    ``(A[jb, ib], Y[ib, kb])``, plus one ``(a_sentinel, y_sentinel)`` pair for
+    every output block of the ``n_row_blocks x n_col_blocks`` region that
+    receives no contribution (so Pallas initializes it).  Block ids are
+    shifted by ``a_offset``/``y_offset`` (concatenated pools) and output
+    coordinates by ``base_row``/``base_col`` (per-task regions of a fused
+    launch).  Returns UNSORTED ``(out_row, out_col, a_id, y_id)`` quadruples
+    in stored-block order; the caller sorts by output block and computes the
+    first-visit flags.
     """
-    if a.shape[1] != y.shape[0]:
-        raise ValueError(f"spmm shape mismatch: {a.shape} x {y.shape}")
-    if a.block_size != y.block_size:
-        raise ValueError("spmm requires equal block sizes")
-
     a_rows = np.asarray(a.row_ids)[: a.stored_blocks]
     a_cols = np.asarray(a.col_ids)[: a.stored_blocks]
     y_rows = np.asarray(y.row_ids)[: y.stored_blocks]
     y_cols = np.asarray(y.col_ids)[: y.stored_blocks]
+    n_row_blocks = a.n_block_rows if n_row_blocks is None else n_row_blocks
+    n_col_blocks = y.n_block_cols if n_col_blocks is None else n_col_blocks
 
     # block-row index of Y: ib -> list of (y_block_id, kb)
     y_by_row: dict[int, list[tuple[int, int]]] = {}
     for yid, (ib, kb) in enumerate(zip(y_rows, y_cols)):
         y_by_row.setdefault(int(ib), []).append((yid, int(kb)))
 
-    triples: list[tuple[int, int, int, int]] = []  # (out_row, out_col, a_id, y_id)
+    triples: list[tuple[int, int, int, int]] = []
+    covered: set[tuple[int, int]] = set()
     for aid, (jb, ib) in enumerate(zip(a_rows, a_cols)):
         for yid, kb in y_by_row.get(int(ib), ()):
-            triples.append((int(jb), kb, aid, yid))
-    triples.sort()
-
-    n_out_rows = a.n_block_rows
-    n_out_cols = y.n_block_cols
-    covered = {(t[0], t[1]) for t in triples}
-    sentinel_a = a.stored_blocks  # index of zero block appended by wrapper
-    sentinel_y = y.stored_blocks
-    for jb in range(n_out_rows):
-        for kb in range(n_out_cols):
+            triples.append((base_row + int(jb), base_col + kb,
+                            a_offset + aid, y_offset + yid))
+            covered.add((int(jb), kb))
+    for jb in range(n_row_blocks):
+        for kb in range(n_col_blocks):
             if (jb, kb) not in covered:
-                triples.append((jb, kb, sentinel_a, sentinel_y))
+                triples.append((base_row + jb, base_col + kb,
+                                a_sentinel, y_sentinel))
+    return triples
+
+
+def first_visit_flags(out_rows: np.ndarray, out_cols: np.ndarray) -> np.ndarray:
+    """1 on the first entry of each (out_row, out_col) run (Pallas zero-init)."""
+    first = np.zeros(len(out_rows), dtype=np.int32)
+    seen: set[tuple[int, int]] = set()
+    for i, (r, c) in enumerate(zip(out_rows, out_cols)):
+        if (r, c) not in seen:
+            first[i] = 1
+            seen.add((r, c))
+    return first
+
+
+def spmm_triples(a: BlockCSR, y: BlockCSR) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side pairing for a single-task SpMM.
+
+    Returns arrays ``(a_ids, y_ids, out_rows, out_cols, first)`` sorted by
+    output block, with one zero-pair appended for every output block that
+    receives no contribution (so Pallas initializes it).  The zero pair
+    indexes the sentinel block appended by the SpMM wrapper at position
+    ``stored_blocks``.
+    """
+    if a.shape[1] != y.shape[0]:
+        raise ValueError(f"spmm shape mismatch: {a.shape} x {y.shape}")
+    if a.block_size != y.block_size:
+        raise ValueError("spmm requires equal block sizes")
+
+    triples = pair_block_triples(a, y, a_sentinel=a.stored_blocks,
+                                 y_sentinel=y.stored_blocks)
     triples.sort()
 
     out_rows = np.array([t[0] for t in triples], dtype=np.int32)
     out_cols = np.array([t[1] for t in triples], dtype=np.int32)
     a_ids = np.array([t[2] for t in triples], dtype=np.int32)
     y_ids = np.array([t[3] for t in triples], dtype=np.int32)
-    first = np.zeros(len(triples), dtype=np.int32)
-    seen: set[tuple[int, int]] = set()
-    for i, (r, c) in enumerate(zip(out_rows, out_cols)):
-        if (r, c) not in seen:
-            first[i] = 1
-            seen.add((r, c))
-    return a_ids, y_ids, out_rows, out_cols, first
+    return a_ids, y_ids, out_rows, out_cols, first_visit_flags(out_rows, out_cols)

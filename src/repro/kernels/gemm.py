@@ -68,3 +68,59 @@ def gemm(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, y)
+
+
+def _gemm_batch_kernel(x_ref, y_ref, z_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], y_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        z_ref[0] = acc_ref[...].astype(z_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bk", "interpret", "out_dtype")
+)
+def gemm_batch(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bk: int = 128,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Batched tile GEMM: ``z[t] = x[t] @ y[t]`` in ONE pallas_call.
+
+    ``x`` is ``(T, m, k)`` (the stacked DTQ row-stripes), ``y`` is
+    ``(T, k, n)`` (the matching col-stripes).  The grid is ``(T, k/bk)`` with
+    the contraction innermost, so each task's output tile stays VMEM-resident
+    while its partial products accumulate — the whole Dense Task Queue drains
+    with a single kernel launch instead of one launch per task.
+    """
+    t, m, k = x.shape
+    t2, k2, n = y.shape
+    assert t == t2 and k == k2, (x.shape, y.shape)
+    assert k % bk == 0, (k, bk)
+    out_dtype = out_dtype or x.dtype
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_gemm_batch_kernel, n_k=n_k),
+        grid=(t, n_k),
+        in_specs=[
+            pl.BlockSpec((1, m, bk), lambda i, kk: (i, 0, kk)),
+            pl.BlockSpec((1, bk, n), lambda i, kk: (i, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i, kk: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((m, n), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

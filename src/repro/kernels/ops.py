@@ -22,6 +22,26 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# Pallas-invocation accounting: every public wrapper bumps this counter, so
+# the scheduler tests/benchmarks can assert batched dispatch really issues
+# O(primitives) launches per kernel instead of O(tasks).
+_PALLAS_CALLS = 0
+
+
+def _count_call() -> None:
+    global _PALLAS_CALLS
+    _PALLAS_CALLS += 1
+
+
+def pallas_call_count() -> int:
+    return _PALLAS_CALLS
+
+
+def reset_pallas_call_count() -> None:
+    global _PALLAS_CALLS
+    _PALLAS_CALLS = 0
+
+
 def _pad_to(x: jax.Array, m: int, n: int) -> jax.Array:
     pm = m - x.shape[0]
     pn = n - x.shape[1]
@@ -44,10 +64,31 @@ def gemm(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128,
     bm_, bn_, bk_ = (min(bm, _round_up(m, 8)), min(bn, _round_up(n, 8)),
                      min(bk, _round_up(k, 8)))
     mp, np_, kp = _round_up(m, bm_), _round_up(n, bn_), _round_up(k, bk_)
+    _count_call()
     out = _gemm.gemm(_pad_to(x, mp, kp), _pad_to(y, kp, np_),
                      bm=bm_, bn=bn_, bk=bk_, interpret=interpret,
                      out_dtype=out_dtype)
     return out[:m, :n]
+
+
+def gemm_batch(x, y, *, bk: int = 128, interpret: bool | None = None,
+               out_dtype=jnp.float32):
+    """Batched tile GEMM ``z[t] = x[t] @ y[t]`` in one pallas_call.
+
+    ``x`` is ``(T, m, k)``, ``y`` is ``(T, k, n)``; tile dims are padded to
+    lane multiples and the output sliced back to ``(T, m, n)``."""
+    interpret = default_interpret() if interpret is None else interpret
+    t, m, k = x.shape
+    t2, k2, n = y.shape
+    assert t == t2 and k == k2, (x.shape, y.shape)
+    bk_ = min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, 8), _round_up(n, 8), _round_up(k, bk_)
+    x = jnp.pad(x, ((0, 0), (0, mp - m), (0, kp - k)))
+    y = jnp.pad(y, ((0, 0), (0, kp - k), (0, np_ - n)))
+    _count_call()
+    out = _gemm.gemm_batch(x, y, bk=bk_, interpret=interpret,
+                           out_dtype=out_dtype)
+    return out[:, :m, :n]
 
 
 def spdmm(a: BlockCSR, y, *, bn: int = 128, interpret: bool | None = None,
@@ -60,9 +101,29 @@ def spdmm(a: BlockCSR, y, *, bn: int = 128, interpret: bool | None = None,
     bn_ = min(bn, _round_up(n, 8))
     kp = a.n_block_cols * a.block_size
     np_ = _round_up(n, bn_)
+    _count_call()
     out = _spdmm.spdmm(a, _pad_to(y, kp, np_), bn=bn_, interpret=interpret,
                        out_dtype=out_dtype)
     return out[:m, :n]
+
+
+def spdmm_fused(a_blocks, y, a_ids, y_rows, out_rows, out_cols, first, *,
+                block_size: int, bn: int, m_pad: int,
+                interpret: bool | None = None, out_dtype=jnp.float32):
+    """Fused multi-task SpDMM over a concatenated stored-block pool; see
+    :func:`repro.kernels.spdmm.spdmm_fused`.  ``y`` must already be laid out
+    with ``bn``-padded col-stripes."""
+    interpret = default_interpret() if interpret is None else interpret
+    _count_call()
+    return _spdmm.spdmm_fused(
+        jnp.asarray(a_blocks), jnp.asarray(y),
+        jnp.asarray(a_ids, dtype=jnp.int32),
+        jnp.asarray(y_rows, dtype=jnp.int32),
+        jnp.asarray(out_rows, dtype=jnp.int32),
+        jnp.asarray(out_cols, dtype=jnp.int32),
+        jnp.asarray(first, dtype=jnp.int32),
+        block_size=block_size, bn=bn, m_pad=m_pad, interpret=interpret,
+        out_dtype=out_dtype, n_entries=len(a_ids))
 
 
 def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,
@@ -71,10 +132,26 @@ def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,
     interpret = default_interpret() if interpret is None else interpret
     m, _ = a.shape
     _, n = y.shape
+    _count_call()
     out = _spmm.spmm(a, y, interpret=interpret, out_dtype=out_dtype)
     return out[:m, :n]
 
 
+def spmm_fused(a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first, *,
+               block_size: int, m_pad: int, n_pad: int,
+               interpret: bool | None = None, out_dtype=jnp.float32):
+    """Fused multi-task SpMM over concatenated block pools; see
+    :func:`repro.kernels.spmm.spmm_fused`."""
+    interpret = default_interpret() if interpret is None else interpret
+    _count_call()
+    return _spmm.spmm_fused(
+        a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first,
+        block_size=block_size, m_pad=m_pad, n_pad=n_pad, interpret=interpret,
+        out_dtype=out_dtype)
+
+
 __all__ = [
-    "BlockCSR", "pack_blockcsr", "gemm", "spdmm", "spmm", "default_interpret",
+    "BlockCSR", "pack_blockcsr", "gemm", "gemm_batch", "spdmm", "spdmm_fused",
+    "spmm", "spmm_fused", "default_interpret", "pallas_call_count",
+    "reset_pallas_call_count",
 ]

@@ -80,3 +80,73 @@ def spdmm(
         out_shape=jax.ShapeDtypeStruct((m_pad, n), out_dtype),
         interpret=interpret,
     )(a.row_ids, a.col_ids, a.first, a.blocks, y)
+
+
+def _spdmm_fused_kernel(aid_ref, yrow_ref, orow_ref, ocol_ref, first_ref,
+                        a_ref, y_ref, z_ref):
+    del aid_ref, yrow_ref, orow_ref, ocol_ref
+    t = pl.program_id(0)
+
+    @pl.when(first_ref[t] == 1)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    z_ref[...] += jnp.dot(
+        a_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(z_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "bn", "m_pad", "interpret", "out_dtype",
+                     "n_entries"),
+)
+def spdmm_fused(
+    a_blocks: jax.Array,
+    y: jax.Array,
+    a_ids: jax.Array,
+    y_rows: jax.Array,
+    out_rows: jax.Array,
+    out_cols: jax.Array,
+    first: jax.Array,
+    *,
+    block_size: int,
+    bn: int,
+    m_pad: int,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+    n_entries: int,
+) -> jax.Array:
+    """Fused multi-task SpDMM: EVERY SpDMM task of a kernel in one launch.
+
+    ``a_blocks`` is the concatenated stored-block pool of all packed row
+    stripes; ``y`` is dense, laid out with each col-stripe padded to ``bn``
+    columns.  Each grid step ``t`` is one (stored block, task) pair: the
+    scalar-prefetched entry arrays steer block ``a_ids[t]`` onto Y block-row
+    ``y_rows[t]`` / col-stripe ``out_cols[t]`` and accumulate into output
+    block ``(out_rows[t], out_cols[t])``.  Entries are sorted by output block
+    so revisits are consecutive (VMEM residency); ``first`` zero-initializes
+    each run.  Output blocks covered by no entry are never read by the caller.
+    """
+    B = block_size
+    k_pad, n_pad = y.shape
+    assert k_pad % B == 0 and n_pad % bn == 0, (y.shape, B, bn)
+
+    return pl.pallas_call(
+        _spdmm_fused_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=(n_entries,),
+            in_specs=[
+                pl.BlockSpec((None, B, B),
+                             lambda t, aid, yrow, orow, ocol, first: (aid[t], 0, 0)),
+                pl.BlockSpec((B, bn),
+                             lambda t, aid, yrow, orow, ocol, first: (yrow[t], ocol[t])),
+            ],
+            out_specs=pl.BlockSpec(
+                (B, bn), lambda t, aid, yrow, orow, ocol, first: (orow[t], ocol[t])
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        interpret=interpret,
+    )(a_ids, y_rows, out_rows, out_cols, first, a_blocks, y)

@@ -96,3 +96,39 @@ def spmm(
         out_dtype=out_dtype,
         n_triples=len(a_ids),
     )
+
+
+def spmm_fused(
+    a_blocks: jax.Array,
+    y_blocks: jax.Array,
+    a_ids,
+    y_ids,
+    out_rows,
+    out_cols,
+    first,
+    *,
+    block_size: int,
+    m_pad: int,
+    n_pad: int,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """Fused multi-task SpMM: a caller-built triple list over CONCATENATED
+    block pools (all packed A row-stripes / Y col-stripes of a kernel, plus
+    one trailing sentinel zero block each) drives a single launch of the
+    triple-walking kernel.  The caller offsets block ids into the pools and
+    output coordinates into per-task regions; sorting/coverage obligations are
+    the same as :func:`repro.kernels.formats.spmm_triples`."""
+    return _spmm_call(
+        jnp.asarray(a_blocks), jnp.asarray(y_blocks),
+        jnp.asarray(a_ids, dtype=jnp.int32), jnp.asarray(y_ids, dtype=jnp.int32),
+        jnp.asarray(out_rows, dtype=jnp.int32),
+        jnp.asarray(out_cols, dtype=jnp.int32),
+        jnp.asarray(first, dtype=jnp.int32),
+        m_pad=m_pad,
+        n_pad=n_pad,
+        block_size=block_size,
+        interpret=interpret,
+        out_dtype=out_dtype,
+        n_triples=len(a_ids),
+    )

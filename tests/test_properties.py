@@ -1,0 +1,75 @@
+"""Hypothesis-driven property sweeps (optional dev dependency).
+
+``pytest.importorskip`` keeps the tier-1 suite collecting when ``hypothesis``
+is absent; the deterministic kernel/layer cases live in ``test_kernels.py``
+and ``test_layers.py`` and always run.  The interpret-mode Pallas sweeps are
+marked ``slow`` and excluded from the default fast lane (see pytest.ini).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.formats import pack_blockcsr
+from repro.models.layers import flash_attention
+
+
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(
+    nrb=st.integers(1, 4), ncb=st.integers(1, 4), nnb=st.integers(1, 3),
+    da=st.floats(0.0, 1.0), dy=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_sparse_kernels_match_dense(nrb, ncb, nnb, da, dy, seed):
+    """Invariant: spdmm/spmm equal the dense product for ANY block pattern."""
+    block = 8
+    rng = np.random.default_rng(seed)
+    m, k, n = nrb * block, ncb * block, nnb * block
+    am = (rng.uniform(size=(nrb, ncb)) < da).astype(np.float32)
+    ym = (rng.uniform(size=(ncb, nnb)) < dy).astype(np.float32)
+    a_dense = (rng.normal(size=(m, k)) * np.kron(am, np.ones((block, block)))
+               ).astype(np.float32)
+    y_dense = (rng.normal(size=(k, n)) * np.kron(ym, np.ones((block, block)))
+               ).astype(np.float32)
+    a = pack_blockcsr(a_dense, block)
+    y_sp = pack_blockcsr(y_dense, block)
+    want = a_dense @ y_dense
+    got_spdmm = ops.spdmm(a, jnp.asarray(y_dense), bn=8, interpret=True)
+    got_spmm = ops.spmm(a, y_sp, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_spdmm), want, rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(got_spmm), want, rtol=2e-4, atol=2e-3)
+
+
+def _naive_attention(q, k, v, causal=False):
+    B, Lq, Hq, Dh = q.shape
+    _, Lk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(np.float32).reshape(B, Lq, Hkv, G, Dh)
+    s = np.einsum("bqhgd,bkhd->bhgqk", qf, np.asarray(k, np.float32))
+    s /= np.sqrt(Dh)
+    if causal:
+        mask = np.arange(Lk)[None, :] <= np.arange(Lq)[:, None]
+        s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = np.einsum("bhgqk,bkhd->bqhgd", p, np.asarray(v, np.float32))
+    return out.reshape(B, Lq, Hq, Dh)
+
+
+@settings(max_examples=10, deadline=None)
+@given(lq=st.integers(1, 33), lk=st.integers(1, 33), seed=st.integers(0, 999))
+def test_property_flash_attention_ragged(lq, lk, seed):
+    """Invariant: flash == naive for arbitrary (non-chunk-aligned) lengths,
+    cross-attention style."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(1, lq, 2, 8)).astype(np.float32)
+    k = rng.normal(size=(1, lk, 2, 8)).astype(np.float32)
+    v = rng.normal(size=(1, lk, 2, 8)).astype(np.float32)
+    got = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=False, q_chunk=8, kv_chunk=8)
+    want = _naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
