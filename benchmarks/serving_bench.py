@@ -1,0 +1,171 @@
+"""Serving benchmark: micro-batching vs the PR-1 per-request loop.
+
+``PYTHONPATH=src python benchmarks/serving_bench.py [--requests 32]
+[--max-batch 8] [--out BENCH_serving.json]``
+
+Three measured scenarios on ONE fixed graph (literal Pallas dispatch,
+interpret mode on CPU):
+
+1. **per_request** — the PR-1 loop: every queued request runs the full
+   2-layer GCN kernel sequence (plans cached, launches not amortized).
+2. **micro_batched** — the serving subsystem coalesces the same queue into
+   micro-batches; one plan/execute pass per batch.  The acceptance metric
+   is pallas LAUNCHES PER REQUEST, which micro-batching must reduce.
+3. **density_drift** — near-dense features swapped mid-stream must trigger
+   the sketch's replan AND still match the pure-jnp reference.
+
+Emits a machine-readable JSON blob (p50/p95 latency, cache hit rate,
+launches per request, drift outcome) for CI trend tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DynasparseEngine, SparseCOO
+from repro.kernels import ops
+from repro.models import gnn
+from repro.serving import (ServingConfig, ServingEngine, SharedPlanCache,
+                           SketchConfig)
+
+
+def _fixed_graph(n: int = 128, avg_deg: int = 4, seed: int = 5) -> SparseCOO:
+    rng = np.random.default_rng(seed)
+    flat = np.sort(rng.choice(n * n, size=avg_deg * n, replace=False))
+    return SparseCOO((n, n),
+                     jnp.asarray((flat // n).astype(np.int32)),
+                     jnp.asarray((flat % n).astype(np.int32)),
+                     jnp.asarray(np.abs(rng.normal(size=avg_deg * n)
+                                        ).astype(np.float32)),
+                     tag="adjacency")
+
+
+def _engine() -> DynasparseEngine:
+    return DynasparseEngine(tile_m=32, tile_n=8, literal=True,
+                            cache=SharedPlanCache())
+
+
+def run(requests: int = 32, max_batch: int = 8, model: str = "GCN",
+        feat: int = 24, hidden: int = 16) -> dict:
+    assert requests >= 32, "acceptance criterion: >= 32 queued requests"
+    adj = _fixed_graph()
+    n = adj.shape[0]
+    rng = np.random.default_rng(0)
+    params = gnn.init_params(model, feat, hidden, hidden)
+    batches = [rng.normal(size=(n, feat)).astype(np.float32)
+               for _ in range(requests)]
+
+    out = {"model": model, "graph_vertices": n, "requests": requests,
+           "max_batch": max_batch}
+
+    # -------- 1) PR-1 per-request loop
+    eng = _engine()
+    ops.reset_pallas_call_count()
+    lat = []
+    outs_seq = []
+    t_all0 = time.perf_counter()
+    for h in batches:
+        t0 = time.perf_counter()
+        z, _ = gnn.run_inference(model, eng, adj, jnp.asarray(h), params)
+        np.asarray(z)
+        lat.append(time.perf_counter() - t0)
+        outs_seq.append(z)
+    wall_seq = time.perf_counter() - t_all0
+    out["per_request"] = {
+        "pallas_launches": ops.pallas_call_count(),
+        "launches_per_request": ops.pallas_call_count() / requests,
+        "wall_s": wall_seq,
+        "latency": {"p50": float(np.percentile(lat, 50)),
+                    "p95": float(np.percentile(lat, 95))},
+        "plan_hit_rate": eng.cache.stats.hit_rate,
+    }
+
+    # -------- 2) micro-batched serving over the same queue
+    cache = SharedPlanCache()
+    srv = ServingEngine(model, params,
+                        engine=DynasparseEngine(tile_m=32, tile_n=8,
+                                                literal=True, cache=cache),
+                        config=ServingConfig(max_batch=max_batch))
+    srv.register_graph("bench", adj)
+    ops.reset_pallas_call_count()
+    t_all0 = time.perf_counter()
+    outs_mb = srv.serve(("bench", h) for h in batches)
+    wall_mb = time.perf_counter() - t_all0
+    launches_mb = ops.pallas_call_count()
+    pct = srv.stats.latency_percentiles()
+    out["micro_batched"] = {
+        "pallas_launches": launches_mb,
+        "launches_per_request": launches_mb / requests,
+        "wall_s": wall_mb,
+        "latency": {"p50": pct["p50"], "p95": pct["p95"]},
+        "plan_hit_rate": cache.stats.hit_rate,
+        "batches": srv.stats.batches,
+        "mean_batch_size": srv.stats.mean_batch_size,
+        "cache_bytes": cache.bytes_used,
+    }
+    err = max(float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+              for a, b in zip(outs_seq, outs_mb))
+    out["micro_batched"]["max_abs_err_vs_per_request"] = err
+    out["launch_reduction"] = (out["per_request"]["launches_per_request"] /
+                               out["micro_batched"]["launches_per_request"])
+
+    # -------- 3) density-drift scenario: near-dense swap mid-stream
+    cache = SharedPlanCache()
+    srv = ServingEngine(model, params,
+                        engine=DynasparseEngine(tile_m=32, tile_n=8,
+                                                literal=True, cache=cache),
+                        config=ServingConfig(
+                            max_batch=1, sketch=SketchConfig(threshold=0.25)))
+    srv.register_graph("bench", adj)
+    sparse_h = (rng.normal(size=(n, feat)) *
+                (rng.uniform(size=(n, feat)) < 0.03)).astype(np.float32)
+    dense_h = rng.normal(size=(n, feat)).astype(np.float32)
+    stream = [sparse_h] * 4 + [dense_h] * 4
+    outs_drift = srv.serve(("bench", h) for h in stream)
+    ref = gnn.run_reference(model, adj, jnp.asarray(dense_h), params)
+    drift_err = float(np.max(np.abs(np.asarray(outs_drift[-1]) -
+                                    np.asarray(ref))))
+    out["density_drift"] = {
+        "replans": cache.stats.replans,
+        "replan_triggered": cache.stats.replans > 0,
+        "max_abs_err_vs_reference": drift_err,
+        "matches_reference": drift_err < 1e-3,
+    }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--model", default="GCN")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless micro-batching reduced "
+                         "launches/request and the drift replan fired (CI)")
+    args = ap.parse_args()
+
+    res = run(requests=args.requests, max_batch=args.max_batch,
+              model=args.model)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"[serving_bench] wrote {args.out}")
+    print(json.dumps({k: res[k] for k in
+                      ("launch_reduction", "per_request", "micro_batched",
+                       "density_drift")}, indent=2))
+    if args.check:
+        ok = (res["launch_reduction"] > 1.0
+              and res["density_drift"]["replan_triggered"]
+              and res["density_drift"]["matches_reference"]
+              and res["micro_batched"]["max_abs_err_vs_per_request"] < 1e-3)
+        if not ok:
+            raise SystemExit("[serving_bench] acceptance check FAILED")
+        print("[serving_bench] acceptance check passed")
+
+
+if __name__ == "__main__":
+    main()

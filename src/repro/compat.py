@@ -1,0 +1,40 @@
+"""Version shims over the jax API surface that moved between releases.
+
+The pinned CI environment runs jax 0.4.37, where:
+
+- ``jax.make_mesh`` exists but does not take ``axis_types`` (and
+  ``jax.sharding.AxisType`` does not exist at all);
+- ``jax.shard_map`` is still ``jax.experimental.shard_map.shard_map`` and
+  spells its replication check ``check_rep`` instead of ``check_vma``.
+
+Everything SPMD in this repo goes through these two wrappers so the same
+code runs on 0.4.37 and on current jax without feature gates in the tests.
+"""
+from __future__ import annotations
+
+import jax
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if _HAS_AXIS_TYPE:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` / ``jax.experimental.shard_map.shard_map``.
+
+    ``check`` maps to ``check_vma`` (new) / ``check_rep`` (old) — both
+    toggle the same replication-mismatch validation.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

@@ -39,7 +39,7 @@ from repro.core.perfmodel import VCK5000, HardwareModel
 from repro.core.plancache import (KernelPlan, PlanCache, StructureEntry,
                                   coo_fingerprint)
 from repro.core.primitives import SparseCOO
-from repro.kernels.formats import pack_blockcsr
+from repro.kernels.formats import pack_blockcsr_coo
 
 Mode = Literal["dynamic", "sparse_only", "dense_only"]
 
@@ -85,6 +85,8 @@ class DynasparseEngine:
         eps: float = 0.0,
         batched: bool = True,
         cache: PlanCache | None = None,
+        drift_threshold: float | None = None,
+        sketch_rows: int = 256,
     ):
         self.hw = hw
         self.tile_m = tile_m
@@ -97,6 +99,10 @@ class DynasparseEngine:
         self.eps = eps
         self.batched = batched
         self.cache = PlanCache() if cache is None else cache
+        # density-drift revalidation of plan hits (the serving subsystem
+        # enables this; None keeps the raw first-call amortization)
+        self.drift_threshold = drift_threshold
+        self.sketch_rows = sketch_rows
         self.report = EngineReport()
 
     def reset(self) -> None:
@@ -137,7 +143,21 @@ class DynasparseEngine:
                         self.hw.name)
             cached = self.cache.get_plan(plan_key)
             if cached is not None:
-                return cached
+                if self.drift_threshold is None:
+                    return cached
+                # revalidate the first-call Y-density assumption with a
+                # cheap row-sampled sketch; replan on drift (stale STQ/DTQ
+                # assignment hazard — Dynasparse's re-decide-on-drift)
+                sk = sparsity.sketch_col_density(
+                    y, tn, max_rows=self.sketch_rows, eps=self.eps)
+                drift = sparsity.density_drift(sk, cached.col_density)
+                if drift <= self.drift_threshold:
+                    return cached
+                # a replanned hit amortized nothing: count it as a miss so
+                # hit_rate stays an honest effectiveness signal under drift
+                self.cache.stats.plan_hits -= 1
+                self.cache.stats.plan_misses += 1
+                self.cache.stats.replans += 1
 
         # (1) dynamic density measurement
         if isinstance(x, SparseCOO):
@@ -171,22 +191,45 @@ class DynasparseEngine:
             self.cache.put_plan(plan_key, plan)
         return plan
 
-    def _packed_structure(self, plan: KernelPlan, x: SparseCOO) -> StructureEntry:
-        """Densified operand + packed BlockCSR row-stripes, cached per
-        structure (one packing serves every kernel width and every request)."""
+    def _packed_structure(
+            self, plan: KernelPlan,
+            x: SparseCOO) -> tuple[tuple, StructureEntry]:
+        """Packed BlockCSR row-stripes, cached per structure (one packing
+        serves every kernel width and every request).  Stripes are packed
+        straight from the COO triplets — no dense intermediate — so packing
+        stays O(nnz + blocks) beyond toy scale."""
         tm = plan.part.tile_m
         nrt = plan.part.n_row_tiles
+        K = x.shape[1]
 
         def _build() -> StructureEntry:
-            xd = x.todense()
-            stripes = {
-                i: pack_blockcsr(xd[i * tm:(i + 1) * tm, :], self.block,
-                                 eps=self.eps)
-                for i in range(nrt)}
-            # device array: repeated requests skip the host->device upload
-            return StructureEntry(dense=jnp.asarray(xd), stripes=stripes)
+            rows = np.asarray(x.rows)
+            cols = np.asarray(x.cols)
+            vals = np.asarray(x.vals)
+            order = np.argsort(rows, kind="stable")
+            rows, cols, vals = rows[order], cols[order], vals[order]
+            bounds = np.searchsorted(rows, np.arange(nrt + 1) * tm)
+            stripes = {}
+            for i in range(nrt):
+                lo, hi = bounds[i], bounds[i + 1]
+                stripes[i] = pack_blockcsr_coo(
+                    (plan.part.row_extent(i), K),
+                    rows[lo:hi] - i * tm, cols[lo:hi], vals[lo:hi],
+                    self.block, eps=self.eps)
+            return StructureEntry(stripes=stripes)
 
-        return self.cache.structure(plan.struct_key + (self.block,), _build)
+        key = plan.struct_key + (self.block,)
+        return key, self.cache.structure(key, _build)
+
+    def _ensure_dense(self, key: tuple, entry: StructureEntry,
+                      x: SparseCOO) -> jnp.ndarray:
+        """Materialize the densified operand on first need (a plan routed
+        tasks of this operand to the dense engine) and re-account its bytes;
+        repeated requests then skip the host->device upload."""
+        if entry.dense is None:
+            entry.dense = jnp.asarray(x.todense())
+            self.cache.recharge(PlanCache._STRUCT, key)
+        return entry.dense
 
     def execute(self, plan: KernelPlan, x, y) -> jnp.ndarray:
         """Functional result of a planned kernel (no re-analysis)."""
@@ -195,8 +238,14 @@ class DynasparseEngine:
             packed = None
             if isinstance(x, SparseCOO):
                 if plan.struct_key is not None:
-                    entry = self._packed_structure(plan, x)
-                    xd, packed = entry.dense, entry.stripes
+                    key, entry = self._packed_structure(plan, x)
+                    packed = entry.stripes
+                    # the densified operand is only needed by dense-engine
+                    # tasks (batched GEMM gather) or the per-task path
+                    if plan.dtq or not self.batched:
+                        xd = self._ensure_dense(key, entry, x)
+                    else:
+                        xd = None
                 else:
                     xd = x.todense()
             else:

@@ -8,14 +8,13 @@ execution.  This module is the TPU-runtime analogue: everything derived from a
 *static* operand's sparsity structure is computed once and reused across
 layers and repeated inference calls (the serving path).
 
-Two cache levels, both LRU-bounded:
+Two cache levels, held in ONE byte-accounted LRU store:
 
 - **structure level** (keyed by the operand's sparsity fingerprint + tile
   geometry): row-stripe densities, and — for the literal execution path — the
-  densified operand plus its packed BlockCSR row-stripes.  Shared by every
-  kernel that multiplies the same adjacency, regardless of the dense operand's
-  width (layer-1 aggregation at hidden width and layer-2 aggregation at class
-  width pack the adjacency exactly once).
+  packed BlockCSR row-stripes (plus, lazily, the densified operand when a
+  plan routes tasks to the dense engine).  Shared by every kernel that
+  multiplies the same adjacency, regardless of the dense operand's width.
 
 - **plan level** (structure key + full kernel geometry + engine mode): the
   task grid, STQ/DTQ assignment, and simulated ``ScheduleReport``.  A repeated
@@ -25,20 +24,27 @@ Two cache levels, both LRU-bounded:
 Only kernels whose X operand is ``SparseCOO`` are cached: its structure is
 static by construction (the graph), and the O(nnz) fingerprint is far cheaper
 than the preprocessing it avoids.  Kernels with a dense X (activations) are
-planned fresh every call.  Deliberate semantics of a plan hit: the DENSE
-operand Y's column densities were measured on the FIRST call and are assumed
-representative on reuse — that is exactly the amortization (one assignment
-per kernel, queues drained without re-analysis; Alg. 4 / Dynasparse), and it
-is what lets layer-2 aggregation and every serving request skip measurement.
-If a workload's feature density shifts drastically between requests, drop the
-cache (``engine.cache.clear()``) or use a fresh engine.
+planned fresh every call.
+
+A plan hit reuses the dense operand Y's column densities measured on the
+FIRST call — the intended amortization (one assignment per kernel; Alg. 4 /
+Dynasparse).  When the engine is constructed with a ``drift_threshold`` it
+revalidates that assumption on every hit with a cheap activation-density
+sketch and replans when the measured density has drifted (the serving
+subsystem enables this by default; see ``repro.serving``).
+
+Eviction is **byte-accounted LRU**: every entry is charged its deep array
+payload (``nbytes_of``), the store evicts least-recently-used entries — plan
+and structure entries alike — once ``max_bytes`` is exceeded (and keeps an
+entry-count bound as a backstop).  ``repro.serving.cache.SharedPlanCache``
+builds the process-wide, multi-graph, persistent variant on top.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Callable
+from typing import Callable, Iterator
 
 import numpy as np
 
@@ -75,17 +81,55 @@ def coo_fingerprint(x: SparseCOO) -> str:
     return fp
 
 
+def nbytes_of(obj) -> int:
+    """Deep byte size of a cache entry's array payload.
+
+    Counts ndarray/jax buffers exactly (``.nbytes``) and charges a small flat
+    constant per scalar/str/None so task lists are not free; containers and
+    dataclasses are traversed recursively.  Python-object overhead is
+    deliberately ignored — the arrays (packed blocks, densified operands,
+    density vectors) dominate every real entry.
+    """
+    if obj is None:
+        return 8
+    if isinstance(obj, (bool, int, float, complex)):
+        return 8
+    if isinstance(obj, (str, bytes)):
+        return len(obj)
+    if isinstance(obj, np.ndarray):
+        return int(obj.nbytes)
+    nb = getattr(obj, "nbytes", None)
+    if isinstance(nb, (int, np.integer)):       # jax.Array and friends
+        return int(nb)
+    if isinstance(obj, dict):
+        return sum(nbytes_of(k) + nbytes_of(v) for k, v in obj.items())
+    if isinstance(obj, (list, tuple, set, frozenset)):
+        return sum(nbytes_of(v) for v in obj)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return sum(nbytes_of(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj))
+    return 64  # unknown opaque object: flat charge
+
+
 @dataclasses.dataclass
 class CacheStats:
     plan_hits: int = 0
     plan_misses: int = 0
     struct_hits: int = 0
     struct_misses: int = 0
-    packs: int = 0       # structure packing events (densify + BlockCSR stripes)
+    packs: int = 0       # structure packing events (BlockCSR stripes)
     analyzes: int = 0    # structure density analyses
+    replans: int = 0     # density-drift revalidations that re-planned
+    evictions: int = 0   # entries dropped by LRU (bytes or count bound)
+    bytes_evicted: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.plan_hits + self.plan_misses
+        return self.plan_hits / total if total else 0.0
 
 
 @dataclasses.dataclass
@@ -106,37 +150,87 @@ class KernelPlan:
 
 @dataclasses.dataclass
 class StructureEntry:
-    """Packed form of a static operand at one (tile_m, block, eps) geometry."""
-    dense: object                     # densified operand, device-resident
+    """Packed form of a static operand at one (tile_m, block, eps) geometry.
+
+    ``dense`` is lazy: stripes are packed straight from the COO triplets
+    (no dense intermediate — required beyond toy scale), and the densified
+    operand is only materialized if a plan actually routes tasks of this
+    operand to the dense engine (or the per-task path needs it)."""
     stripes: dict[int, BlockCSR]      # row-stripe index -> packed BlockCSR
+    dense: object | None = None       # densified operand, device-resident
 
 
 class PlanCache:
-    """Structure-keyed LRU cache of kernel plans and packed operands."""
+    """Structure-keyed, byte-accounted LRU cache of kernel plans and packed
+    operands.
 
-    def __init__(self, capacity: int = 256):
+    ``capacity`` bounds the entry count (backstop); ``max_bytes`` bounds the
+    summed deep array payload across ALL entry kinds — plans, density
+    vectors and packed structures share one LRU order, so a cold graph's
+    packed stripes are evicted before a hot graph's plans.
+    """
+
+    # entry-kind prefixes of the unified store
+    _PLAN, _DENSITY, _STRUCT = "plan", "density", "struct"
+
+    def __init__(self, capacity: int = 256, max_bytes: int | None = None):
         self.capacity = capacity
-        self._plans: OrderedDict[tuple, KernelPlan] = OrderedDict()
-        self._densities: OrderedDict[tuple, np.ndarray] = OrderedDict()
-        self._structs: OrderedDict[tuple, StructureEntry] = OrderedDict()
+        self.max_bytes = max_bytes
+        self._entries: OrderedDict[tuple, tuple[object, int]] = OrderedDict()
+        self.bytes_used = 0
         self.stats = CacheStats()
 
     # ------------------------------------------------------------- helpers
-    def _get(self, store: OrderedDict, key):
-        if key in store:
-            store.move_to_end(key)
-            return store[key]
+    def _get(self, kind: str, key):
+        k = (kind, key)
+        if k in self._entries:
+            self._entries.move_to_end(k)
+            return self._entries[k][0]
         return None
 
-    def _put(self, store: OrderedDict, key, value):
-        store[key] = value
-        store.move_to_end(key)
-        while len(store) > self.capacity:
-            store.popitem(last=False)
+    def _put(self, kind: str, key, value) -> None:
+        k = (kind, key)
+        nb = nbytes_of(value)
+        if k in self._entries:
+            self.bytes_used -= self._entries[k][1]
+        self._entries[k] = (value, nb)
+        self._entries.move_to_end(k)
+        self.bytes_used += nb
+        self._evict()
+
+    def _evict(self) -> None:
+        while len(self._entries) > self.capacity or (
+                self.max_bytes is not None
+                and self.bytes_used > self.max_bytes
+                and len(self._entries) > 1):
+            _, (_, nb) = self._entries.popitem(last=False)
+            self.bytes_used -= nb
+            self.stats.evictions += 1
+            self.stats.bytes_evicted += nb
+
+    def recharge(self, kind: str, key) -> None:
+        """Re-measure an entry whose payload mutated in place (e.g. a
+        ``StructureEntry`` whose lazy ``dense`` was just materialized)."""
+        k = (kind, key)
+        if k in self._entries:
+            value, nb = self._entries[k]
+            self.bytes_used -= nb
+            new_nb = nbytes_of(value)
+            self._entries[k] = (value, new_nb)
+            self.bytes_used += new_nb
+            self._evict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def items(self) -> Iterator[tuple[tuple, object]]:
+        """(kind, key) -> value pairs in LRU order (persistence hook)."""
+        for (kind, key), (value, _) in self._entries.items():
+            yield (kind, key), value
 
     # ---------------------------------------------------------- plan level
     def get_plan(self, key: tuple) -> KernelPlan | None:
-        plan = self._get(self._plans, key)
+        plan = self._get(self._PLAN, key)
         if plan is None:
             self.stats.plan_misses += 1
         else:
@@ -144,37 +238,36 @@ class PlanCache:
         return plan
 
     def put_plan(self, key: tuple, plan: KernelPlan) -> None:
-        self._put(self._plans, key, plan)
+        self._put(self._PLAN, key, plan)
 
     # ----------------------------------------------------- structure level
     def row_density(self, key: tuple,
                     compute: Callable[[], np.ndarray]) -> np.ndarray:
         """Get-or-compute the per-row-stripe densities of a static operand."""
-        d = self._get(self._densities, key)
+        d = self._get(self._DENSITY, key)
         if d is not None:
             self.stats.struct_hits += 1
             return d
         self.stats.struct_misses += 1
         self.stats.analyzes += 1
         d = np.asarray(compute())
-        self._put(self._densities, key, d)
+        self._put(self._DENSITY, key, d)
         return d
 
     def structure(self, key: tuple,
                   compute: Callable[[], StructureEntry]) -> StructureEntry:
-        """Get-or-compute the packed (dense + BlockCSR stripes) form."""
-        e = self._get(self._structs, key)
+        """Get-or-compute the packed BlockCSR-stripe form."""
+        e = self._get(self._STRUCT, key)
         if e is not None:
             self.stats.struct_hits += 1
             return e
         self.stats.struct_misses += 1
         self.stats.packs += 1
         e = compute()
-        self._put(self._structs, key, e)
+        self._put(self._STRUCT, key, e)
         return e
 
     def clear(self) -> None:
-        self._plans.clear()
-        self._densities.clear()
-        self._structs.clear()
+        self._entries.clear()
+        self.bytes_used = 0
         self.stats = CacheStats()

@@ -136,6 +136,10 @@ def execute_plan(
     (index -> BlockCSR), the PlanCache's amortized §III-B preprocessing;
     missing stripes are packed on the fly.  ``batched=False`` keeps the
     original one-launch-per-task path for equivalence testing.
+
+    ``x`` may be ``None`` on the batched path when ``packed`` covers every
+    stripe the sparse queue touches AND the dense queue is empty — the
+    engine's graph-scale mode, where the operand is never densified.
     """
     interpret = ops.default_interpret() if interpret is None else interpret
     if batched:
@@ -183,7 +187,7 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
     nrt, nct = part.n_row_tiles, part.n_col_tiles
     B = block
     R = -(-tm // B)                  # block-rows reserved per row-stripe slot
-    x = jnp.asarray(x)
+    x = None if x is None else jnp.asarray(x)
     y = jnp.asarray(y)
     z = jnp.zeros((M, N), dtype=jnp.float32)
 
@@ -196,11 +200,18 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
         if packed is not None and i in packed:
             stripes[i] = packed[i]
         else:
+            if x is None:
+                raise ValueError(
+                    f"execute_plan: row-stripe {i} is missing from `packed` "
+                    "and no dense x was supplied to pack it from")
             stripes[i] = pack_blockcsr(
                 np.asarray(x[i * tm:(i + 1) * tm, :]), B, eps=eps)
 
     # ---------------- DTQ: one batched GEMM over all dense tiles
     if dtq:
+        if x is None:
+            raise ValueError("execute_plan: dense-queue tasks need the "
+                             "densified x operand (got x=None)")
         task_is = np.array([t.i for t in dtq])
         task_js = np.array([t.j for t in dtq])
         x_p = jnp.pad(x, ((0, nrt * tm - M), (0, 0)))

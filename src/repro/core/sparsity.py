@@ -63,6 +63,36 @@ def tile_density(x: jax.Array, tile_m: int, tile_n: int,
     return nz / (tile_m * tile_n)
 
 
+def sketch_col_density(y: jax.Array, tile_n: int, *, max_rows: int = 256,
+                       eps: float = 0.0) -> np.ndarray:
+    """Cheap per-col-stripe density ESTIMATE from a strided row sample.
+
+    The serving path revalidates a cached plan's measured Y-column densities
+    on every hit; a full ``stripe_density`` scan would erase much of the
+    amortization on large feature matrices, so the sketch reads at most
+    ``max_rows`` evenly-strided rows — O(max_rows · N) instead of O(K · N).
+    With ``K <= max_rows`` it degenerates to the exact measurement.
+    """
+    K = y.shape[0]
+    if K > max_rows:
+        stride = -(-K // max_rows)
+        y = y[::stride]
+    return np.asarray(stripe_density(y, tile_n, axis=1, eps=eps))
+
+
+def density_drift(sketch: np.ndarray, reference: np.ndarray) -> float:
+    """Max per-stripe absolute density gap between a sketch and the densities
+    a cached plan was built from.  Incomparable shapes (the tile geometry
+    changed) count as infinite drift — always replan."""
+    a = np.asarray(sketch, dtype=np.float64)
+    b = np.asarray(reference, dtype=np.float64)
+    if a.shape != b.shape:
+        return float("inf")
+    if a.size == 0:
+        return 0.0
+    return float(np.max(np.abs(a - b)))
+
+
 def block_density(x: np.ndarray, block: int, eps: float = 0.0) -> float:
     """Fraction of non-zero B x B blocks — the TPU-native α (tile-level skip
     granularity; see DESIGN.md §2)."""

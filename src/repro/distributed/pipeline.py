@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 
 def pipeline_apply(
     mesh: Mesh,
@@ -75,10 +77,10 @@ def pipeline_apply(
         return outputs
 
     spec_params = jax.tree.map(lambda _: P("pipe"), stage_params)
-    fn = jax.shard_map(per_stage, mesh=mesh,
-                       in_specs=(spec_params, P()),
-                       out_specs=P(),
-                       check_vma=False)
+    fn = compat.shard_map(per_stage, mesh=mesh,
+                          in_specs=(spec_params, P()),
+                          out_specs=P(),
+                          check=False)
     return fn(stage_params, x)
 
 

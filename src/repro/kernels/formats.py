@@ -159,6 +159,95 @@ def pack_blockcsr(
     )
 
 
+def pack_blockcsr_coo(
+    shape: Tuple[int, int],
+    rows: np.ndarray,
+    cols: np.ndarray,
+    vals: np.ndarray,
+    block_size: int,
+    *,
+    capacity: int | None = None,
+    dtype=None,
+    eps: float = 0.0,
+) -> BlockCSR:
+    """Pack COO triplets into ``BlockCSR`` WITHOUT a dense intermediate.
+
+    Bit-identical to ``pack_blockcsr(dense_of(triplets), ...)`` — duplicate
+    coordinates are summed in triplet order (matching ``np.add.at`` on the
+    densified matrix), blocks whose summed magnitudes are all ``<= eps`` are
+    skipped, empty block-rows keep a zero block at column 0, and ``capacity``
+    padding appends zero blocks on the last block-row — but the working set
+    is O(nnz + stored_blocks · B²) instead of O(M · K).  This is what lets
+    the engine pack a graph-scale adjacency's row-stripes at plan time.
+    """
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    M, K = shape
+    B = block_size
+    nrb, ncb = _ceil_div(M, B), _ceil_div(K, B)
+    if (np.any(rows >= M) or np.any(cols >= K)
+            or np.any(rows < 0) or np.any(cols < 0)):
+        raise ValueError("COO coordinate out of bounds for shape "
+                         f"{(M, K)}")
+
+    # candidate blocks = unique (block-row, block-col) pairs holding any nnz
+    # (int64: block-grid sizes beyond 2^31 overflow the triplets' int32)
+    key = rows.astype(np.int64) // B * ncb + cols // B
+    uniq = np.unique(key)                       # sorted == (rb, cb) order
+    blk_of = np.searchsorted(uniq, key)
+    cand = np.zeros((len(uniq), B, B), dtype=vals.dtype)
+    np.add.at(cand, (blk_of, rows % B, cols % B), vals)
+
+    if eps == 0.0:
+        keep = np.any(cand != 0, axis=(1, 2))
+    else:
+        keep = np.any(np.abs(cand) > eps, axis=(1, 2))
+    kept_keys = uniq[keep]
+    kept_blocks = cand[keep]
+    kept_rows = kept_keys // ncb
+    kept_cols = kept_keys % ncb
+
+    out_rows, out_cols, first, blocks = [], [], [], []
+    ptr = 0
+    zero_blk = np.zeros((B, B), dtype=vals.dtype)
+    for rb in range(nrb):
+        row_has_block = False
+        while ptr < len(kept_keys) and kept_rows[ptr] == rb:
+            out_rows.append(rb)
+            out_cols.append(int(kept_cols[ptr]))
+            first.append(0 if row_has_block else 1)
+            blocks.append(kept_blocks[ptr])
+            row_has_block = True
+            ptr += 1
+        if not row_has_block:  # keep output init coverage
+            out_rows.append(rb)
+            out_cols.append(0)
+            first.append(1)
+            blocks.append(zero_blk)
+
+    nnzb = len(blocks)
+    cap = capacity if capacity is not None else nnzb
+    if cap < nnzb:
+        raise ValueError(f"capacity {cap} < stored blocks {nnzb}")
+    for _ in range(cap - nnzb):
+        out_rows.append(nrb - 1)
+        out_cols.append(0)
+        first.append(0)
+        blocks.append(zero_blk)
+
+    out_dtype = dtype or vals.dtype
+    return BlockCSR(
+        shape=(M, K),
+        block_size=B,
+        row_ids=jnp.asarray(out_rows, dtype=jnp.int32),
+        col_ids=jnp.asarray(out_cols, dtype=jnp.int32),
+        first=jnp.asarray(first, dtype=jnp.int32),
+        blocks=jnp.asarray(np.stack(blocks).astype(out_dtype)),
+        nnzb=nnzb,
+    )
+
+
 def pair_block_triples(
     a: BlockCSR,
     y: BlockCSR,

@@ -6,18 +6,20 @@ Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
 it, tensor-parallel stays within a pod.
 
 Functions only — importing this module never touches jax device state.
+Mesh construction goes through ``repro.compat.make_mesh`` so the same code
+runs on jax 0.4.37 (no ``AxisType``) and on current jax.
 """
 from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh_for_devices(n_devices: int, *, model_parallel: int = 1,
@@ -28,9 +30,6 @@ def make_mesh_for_devices(n_devices: int, *, model_parallel: int = 1,
                                                       model_parallel, pods)
     data = n_devices // (model_parallel * pods)
     if pods > 1:
-        return jax.make_mesh(
-            (pods, data, model_parallel), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pods, data, model_parallel),
+                                ("pod", "data", "model"))
+    return compat.make_mesh((data, model_parallel), ("data", "model"))

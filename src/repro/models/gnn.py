@@ -136,17 +136,24 @@ def run_inference(model: str, engine: DynasparseEngine, adj, h, params):
 
 
 def run_serving(model: str, engine: DynasparseEngine, adj, feature_batches,
-                params):
+                params, *, max_batch: int = 1):
     """Serving path: repeated inference over a stream of feature matrices on
-    a FIXED graph.  Request 1 populates the engine's plan cache; every later
-    request hits it (no density re-measurement, no re-analysis, no
-    re-packing).  Returns (list of logits, list of per-request reports)."""
-    outs, reports = [], []
-    for h in feature_batches:
-        logits, report = run_inference(model, engine, adj, h, params)
-        outs.append(logits)
-        reports.append(report)
-    return outs, reports
+    a FIXED graph — a thin wrapper over :mod:`repro.serving`.
+
+    Request 1 populates the engine's plan cache; every later request hits it
+    (no density re-measurement, no re-analysis, no re-packing), and the
+    density sketch revalidates each hit against the live feature batch.
+    ``max_batch > 1`` additionally coalesces the stream into micro-batches
+    served with one plan/execute pass each.  Returns (list of logits, list
+    of per-request engine reports — shared within a micro-batch)."""
+    from repro.serving import ServingConfig, ServingEngine
+
+    srv = ServingEngine(model, params, engine=engine,
+                        config=ServingConfig(max_batch=max_batch))
+    srv.register_graph("default", adj)
+    outs = srv.serve(("default", jnp.asarray(h)) for h in feature_batches)
+    by_id = sorted(srv.stats.requests, key=lambda r: r.request_id)
+    return outs, [r.report for r in by_id]
 
 
 def run_reference(model: str, adj, h, params):

@@ -1,0 +1,19 @@
+"""Serving subsystem: async micro-batched GNN inference over a shared
+multi-graph plan cache.
+
+    queue ──► density sketch ──► SharedPlanCache ──► batched dispatch
+
+See ``repro.serving.engine`` for the request path and ``repro.serving.cache``
+for the process-wide cache + persistence.
+"""
+from repro.serving.cache import (GraphKey, SharedPlanCache, get_shared_cache,
+                                 set_shared_cache)
+from repro.serving.engine import (RequestStats, ServingConfig, ServingEngine,
+                                  ServingStats, batched_mm)
+from repro.serving.sketch import SketchConfig
+
+__all__ = [
+    "GraphKey", "SharedPlanCache", "get_shared_cache", "set_shared_cache",
+    "RequestStats", "ServingConfig", "ServingEngine", "ServingStats",
+    "batched_mm", "SketchConfig",
+]

@@ -1,0 +1,230 @@
+"""SharedPlanCache — the process-wide, multi-graph, persistent plan cache.
+
+Serving amortizes the paper's preprocessing across *every* request the
+process handles, not just requests of one engine: all ``ServingEngine``
+instances (and any ``DynasparseEngine`` constructed with it) share one
+byte-accounted LRU store, so two models serving the same graph share one
+packed adjacency, and a cold graph's packed stripes are evicted before a hot
+graph's plans.
+
+Keying: graphs are registered under a :class:`GraphKey` —
+``(fingerprint, shape, dtype)`` — where the fingerprint is the O(nnz) content
+digest also used by the plan-level keys, so a registry entry and its cache
+entries can never disagree about which adjacency they describe.
+
+Persistence: ``save()`` snapshots every cache entry (device arrays are
+pulled back to host numpy) plus the graph registry; ``load()`` restores it,
+so a serving restart skips re-analysis and re-packing entirely — the
+GraphAGILE "compile ahead of execution" property across process lifetimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import threading
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plancache import PlanCache, StructureEntry
+from repro.core.primitives import SparseCOO
+from repro.core.plancache import coo_fingerprint
+
+_PERSIST_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphKey:
+    """Identity of a registered graph: content fingerprint + geometry."""
+    fingerprint: str
+    shape: tuple[int, int]
+    dtype: str
+
+    @classmethod
+    def of(cls, adj: SparseCOO) -> "GraphKey":
+        return cls(fingerprint=coo_fingerprint(adj),
+                   shape=tuple(adj.shape),
+                   dtype=str(np.asarray(adj.vals).dtype))
+
+
+def _to_host(obj):
+    """Recursively pull jax arrays back to host numpy (pickle-safe)."""
+    if isinstance(obj, jax.Array):
+        return np.asarray(obj)
+    if isinstance(obj, np.ndarray) or obj is None or isinstance(
+            obj, (bool, int, float, complex, str, bytes)):
+        return obj
+    if isinstance(obj, dict):
+        return {k: _to_host(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_to_host(v) for v in obj]
+    if isinstance(obj, tuple):
+        return tuple(_to_host(v) for v in obj)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return dataclasses.replace(obj, **{
+            f.name: _to_host(getattr(obj, f.name))
+            for f in dataclasses.fields(obj)})
+    return obj
+
+
+def _struct_to_device(entry: StructureEntry) -> StructureEntry:
+    """Re-upload a restored structure entry's payload to the device ONCE at
+    load time — the hot path must keep the packed stripes device-resident,
+    not pay a host->device transfer per micro-batch."""
+    stripes = {
+        i: jax.tree_util.tree_map(jnp.asarray, bcsr)
+        for i, bcsr in entry.stripes.items()}
+    dense = None if entry.dense is None else jnp.asarray(entry.dense)
+    return StructureEntry(stripes=stripes, dense=dense)
+
+
+class SharedPlanCache(PlanCache):
+    """Thread-safe multi-graph :class:`PlanCache` with save/load.
+
+    Defaults are serving-scale: room for many graphs' plans under one byte
+    budget.  All mutating/reading accessors take an RLock so engines on
+    worker threads can share one instance.
+    """
+
+    def __init__(self, capacity: int = 4096,
+                 max_bytes: int | None = 256 * 1024 * 1024):
+        super().__init__(capacity=capacity, max_bytes=max_bytes)
+        self._lock = threading.RLock()
+        self._graphs: dict[str, GraphKey] = {}   # graph_id -> key
+
+    # ----------------------------------------------------- locked accessors
+    # The get-or-compute methods are locked as a WHOLE (not just the
+    # primitive _get/_put) so two worker threads can never pack/analyze the
+    # same structure twice or interleave a replace between a miss and its
+    # put — the RLock makes the nested primitive locking reentrant.
+    def _get(self, kind, key):
+        with self._lock:
+            return super()._get(kind, key)
+
+    def _put(self, kind, key, value):
+        with self._lock:
+            super()._put(kind, key, value)
+
+    def recharge(self, kind, key):
+        with self._lock:
+            super().recharge(kind, key)
+
+    def get_plan(self, key):
+        with self._lock:
+            return super().get_plan(key)
+
+    def put_plan(self, key, plan):
+        with self._lock:
+            super().put_plan(key, plan)
+
+    def row_density(self, key, compute):
+        with self._lock:
+            return super().row_density(key, compute)
+
+    def structure(self, key, compute):
+        with self._lock:
+            return super().structure(key, compute)
+
+    def items(self):
+        with self._lock:
+            yield from list(super().items())
+
+    def clear(self):
+        with self._lock:
+            super().clear()
+            self._graphs.clear()
+
+    # ------------------------------------------------------- graph registry
+    def register_graph(self, graph_id: str, adj: SparseCOO) -> GraphKey:
+        """Register (or re-register) a graph under ``graph_id``.
+
+        Re-registering the same id with a DIFFERENT graph is allowed — the
+        old graph's cache entries age out by LRU; the registry always maps
+        the id to the latest content key.
+        """
+        key = GraphKey.of(adj)
+        with self._lock:
+            self._graphs[graph_id] = key
+        return key
+
+    def graph_key(self, graph_id: str) -> GraphKey | None:
+        with self._lock:
+            return self._graphs.get(graph_id)
+
+    @property
+    def graphs(self) -> dict[str, GraphKey]:
+        with self._lock:
+            return dict(self._graphs)
+
+    # --------------------------------------------------------- persistence
+    def save(self, path: str) -> dict:
+        """Snapshot every entry + the graph registry to ``path``.
+
+        Device arrays are converted to host numpy; entry order (LRU) is
+        preserved.  Returns a small manifest (entry count, bytes) for logs.
+        """
+        with self._lock:
+            entries = [((kind, key), _to_host(value))
+                       for (kind, key), value in self.items()]
+            payload = {
+                "version": _PERSIST_VERSION,
+                "entries": entries,
+                "graphs": dict(self._graphs),
+            }
+            manifest = {"entries": len(entries), "bytes": self.bytes_used,
+                        "graphs": len(self._graphs)}
+        with open(path, "wb") as f:
+            pickle.dump(payload, f)
+        return manifest
+
+    def load(self, path: str) -> dict:
+        """Restore a snapshot saved by :meth:`save` into this cache.
+
+        Loaded entries land in saved LRU order *below* anything already
+        cached (existing entries stay most-recent).  Stats are not restored
+        — hit/miss counting starts fresh, which is what a restarted serving
+        process wants to observe.
+        """
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        if payload.get("version") != _PERSIST_VERSION:
+            raise ValueError(
+                f"unsupported plan-cache snapshot version "
+                f"{payload.get('version')!r} (want {_PERSIST_VERSION})")
+        with self._lock:
+            live = list(self.items())
+            self._entries.clear()
+            self.bytes_used = 0
+            for (kind, key), value in payload["entries"]:
+                if kind == self._STRUCT:
+                    value = _struct_to_device(value)
+                super()._put(kind, key, value)
+            for (kind, key), value in live:
+                super()._put(kind, key, value)
+            self._graphs.update(payload["graphs"])
+            return {"entries": len(payload["entries"]),
+                    "graphs": len(payload["graphs"])}
+
+
+# --------------------------------------------------------------- singleton
+_shared: SharedPlanCache | None = None
+_shared_lock = threading.Lock()
+
+
+def get_shared_cache() -> SharedPlanCache:
+    """The process-wide cache used by every ServingEngine by default."""
+    global _shared
+    with _shared_lock:
+        if _shared is None:
+            _shared = SharedPlanCache()
+        return _shared
+
+
+def set_shared_cache(cache: SharedPlanCache | None) -> None:
+    """Swap (or reset, with ``None``) the process-wide cache — tests and
+    drivers that need an isolated or pre-loaded instance."""
+    global _shared
+    with _shared_lock:
+        _shared = cache

@@ -1,0 +1,278 @@
+"""ServingEngine — async micro-batched GNN inference.
+
+The front-end of the serving subsystem: concurrent requests against the
+same registered graph are coalesced into one stacked feature matrix and
+served with ONE plan/execute pass per model kernel — GraphAGILE's overlay
+insight (batch requests through a compiled kernel sequence instead of
+replaying the whole pipeline per request) on top of the SharedPlanCache's
+amortized preprocessing.
+
+Batching math: a GNN layer is matmuls plus element-wise ops, so ``k``
+requests' feature matrices ``h_r`` (each ``N x d``) stack column-wise into
+``H = [h_1 | ... | h_k]`` (``N x k·d``).  Aggregation ``Â · H`` distributes
+over the column blocks directly; transformation ``H · W`` is computed by
+unstacking to ``(k·N, d)`` row form around a single engine matmul.  Block
+``r`` of every intermediate therefore equals the per-request computation
+bit-for-bit — micro-batched results match ``run_reference`` per request.
+
+Request lifecycle::
+
+    submit ──► per-graph queue ──► micro-batch (≤ max_batch, ≤ max_delay)
+           ──► density sketch revalidates cached plan (replan on drift)
+           ──► one plan/execute pass over the stacked features
+           ──► outputs split per request, futures resolved, stats recorded
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+from typing import Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import DynasparseEngine, EngineReport
+from repro.core.primitives import SparseCOO
+from repro.models import gnn
+from repro.serving.cache import GraphKey, SharedPlanCache, get_shared_cache
+from repro.serving.sketch import SketchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Micro-batching + revalidation policy of one ServingEngine."""
+    max_batch: int = 8            # requests coalesced per dispatch
+    max_delay_s: float = 0.0      # batching window after the first request
+    sketch: SketchConfig = SketchConfig()
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request observability record (the ISSUE's latency/queue-depth)."""
+    request_id: int
+    graph_id: str
+    queue_depth: int              # requests already waiting at enqueue
+    batch_size: int = 0           # size of the micro-batch it rode in
+    t_queue: float = 0.0          # seconds from enqueue to dispatch
+    t_execute: float = 0.0        # micro-batch execute wall (shared)
+    latency: float = 0.0          # enqueue -> result available
+    report: EngineReport | None = None   # micro-batch engine report (shared)
+
+
+@dataclasses.dataclass
+class ServingStats:
+    requests: list[RequestStats] = dataclasses.field(default_factory=list)
+    batches: int = 0
+
+    def latency_percentiles(self) -> dict:
+        if not self.requests:
+            return {"p50": 0.0, "p95": 0.0, "mean": 0.0}
+        lat = np.array([r.latency for r in self.requests])
+        return {"p50": float(np.percentile(lat, 50)),
+                "p95": float(np.percentile(lat, 95)),
+                "mean": float(lat.mean())}
+
+    @property
+    def mean_batch_size(self) -> float:
+        if not self.requests:
+            return 0.0
+        return len(self.requests) / max(1, self.batches)
+
+    def as_dict(self) -> dict:
+        return {"requests": len(self.requests), "batches": self.batches,
+                "mean_batch_size": self.mean_batch_size,
+                "latency": self.latency_percentiles()}
+
+
+@dataclasses.dataclass
+class _Request:
+    features: jnp.ndarray
+    future: asyncio.Future
+    stats: RequestStats
+    t_enqueue: float
+
+
+def batched_mm(engine: DynasparseEngine) -> gnn.MM:
+    """The stacked-representation matmul the model zoo is applied against.
+
+    Sparse x (aggregation): the stacked ``(N, k·d)`` operand feeds one
+    engine matmul — the plan for this graph/width is shared by every
+    micro-batch of the same size.  Dense x (transformation): the stacked
+    operand is unstacked to row form ``(k·N, d_in)`` around one matmul, so
+    weights are never block-diagonalized.  ``k`` is recovered from the
+    width ratio, so the same ``mm`` serves every layer of every model.
+    """
+    def mm(x, y, name: str = "kernel"):
+        if isinstance(x, SparseCOO):
+            z, _ = engine.matmul(x, y, name=name)
+            return z
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        d_in = y.shape[0]
+        if x.shape[1] == d_in:          # unstacked (k == 1) — plain kernel
+            z, _ = engine.matmul(x, y, name=name)
+            return z
+        if x.shape[1] % d_in:
+            raise ValueError(
+                f"stacked width {x.shape[1]} is not a multiple of the "
+                f"weight fan-in {d_in}")
+        k = x.shape[1] // d_in
+        n = x.shape[0]
+        xr = x.reshape(n, k, d_in).transpose(1, 0, 2).reshape(k * n, d_in)
+        z, _ = engine.matmul(xr, y, name=name)
+        d_out = y.shape[1]
+        return z.reshape(k, n, d_out).transpose(1, 0, 2).reshape(n, k * d_out)
+    return mm
+
+
+class ServingEngine:
+    """Async micro-batching front-end over one DynasparseEngine.
+
+    One instance serves ONE model (name + params) over any number of
+    registered graphs; the plan cache is the process-wide
+    :func:`get_shared_cache` unless an engine/cache is supplied, so
+    independent ServingEngines still share packed adjacencies.
+    """
+
+    def __init__(
+        self,
+        model: str,
+        params: dict,
+        engine: DynasparseEngine | None = None,
+        *,
+        config: ServingConfig = ServingConfig(),
+        cache: SharedPlanCache | None = None,
+    ):
+        if model not in gnn.MODELS:
+            raise ValueError(f"unknown model {model!r} (have {gnn.MODELS})")
+        self.model = model
+        self.params = params
+        self.config = config
+        if engine is None:
+            # `is None`, not `or`: an empty PlanCache is falsy (__len__)
+            engine = DynasparseEngine(
+                cache=cache if cache is not None else get_shared_cache())
+        # the sketch policy is applied around each dispatch, never left on a
+        # caller-supplied engine (no hidden mutation outliving the serve)
+        self.engine = engine
+        self.stats = ServingStats()
+        self._graphs: dict[str, SparseCOO] = {}
+        self._queues: dict[str, collections.deque[_Request]] = {}
+        self._draining: set[str] = set()
+        self._next_id = 0
+
+    # ------------------------------------------------------------- graphs
+    def register_graph(self, graph_id: str, adj: SparseCOO) -> GraphKey:
+        """Make ``graph_id`` servable.  Returns the content key; when the
+        engine's cache is a SharedPlanCache the key is also recorded in its
+        registry (persistence manifest / observability)."""
+        self._graphs[graph_id] = adj
+        self._queues.setdefault(graph_id, collections.deque())
+        if isinstance(self.engine.cache, SharedPlanCache):
+            return self.engine.cache.register_graph(graph_id, adj)
+        return GraphKey.of(adj)
+
+    # ------------------------------------------------------------ requests
+    async def infer(self, graph_id: str, features) -> jnp.ndarray:
+        """Submit one request and await its logits.  Concurrent callers on
+        the same graph are coalesced into one micro-batch."""
+        if graph_id not in self._graphs:
+            raise KeyError(f"graph {graph_id!r} is not registered")
+        loop = asyncio.get_running_loop()
+        q = self._queues[graph_id]
+        stats = RequestStats(request_id=self._next_id, graph_id=graph_id,
+                             queue_depth=len(q))
+        self._next_id += 1
+        req = _Request(features=jnp.asarray(features),
+                       future=loop.create_future(), stats=stats,
+                       t_enqueue=time.perf_counter())
+        q.append(req)
+        if graph_id not in self._draining:
+            self._draining.add(graph_id)
+            asyncio.ensure_future(self._drain(graph_id))
+        return await req.future
+
+    async def _drain(self, graph_id: str) -> None:
+        """Per-graph dispatcher: opened by the first request of a burst,
+        closes when the queue runs dry.  Single event loop ⇒ the dry-check
+        and the ``_draining`` hand-back happen without an await between
+        them, so a queue can never strand a request."""
+        q = self._queues[graph_id]
+        try:
+            while q:
+                if (len(q) < self.config.max_batch
+                        and self.config.max_delay_s > 0):
+                    await asyncio.sleep(self.config.max_delay_s)
+                else:
+                    await asyncio.sleep(0)   # let same-tick submitters land
+                batch = [q.popleft()
+                         for _ in range(min(len(q), self.config.max_batch))]
+                if batch:
+                    self._dispatch(graph_id, batch)
+        finally:
+            self._draining.discard(graph_id)
+
+    def _dispatch(self, graph_id: str, batch: list[_Request]) -> None:
+        """Serve one micro-batch: stack → one engine pass → split."""
+        t0 = time.perf_counter()
+        adj = self._graphs[graph_id]
+        k = len(batch)
+        widths = [r.features.shape[1] for r in batch]
+        if len(set(widths)) != 1:   # model zoo fixes the fan-in per model
+            err = ValueError(f"micro-batch mixes feature widths {widths}")
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(err)
+            return
+        h = (batch[0].features if k == 1
+             else jnp.concatenate([r.features for r in batch], axis=1))
+
+        saved = (self.engine.drift_threshold, self.engine.sketch_rows)
+        try:
+            self.config.sketch.apply(self.engine)
+            self.engine.reset()
+            logits = gnn.APPLY[self.model](batched_mm(self.engine), adj, h,
+                                           self.params)
+        except Exception as exc:
+            # resolve every future — an engine-side error must fail the
+            # batch's requests, never strand them (serve() would deadlock)
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(exc)
+            return
+        finally:
+            self.engine.drift_threshold, self.engine.sketch_rows = saved
+        report = self.engine.report
+        t1 = time.perf_counter()
+        out_w = logits.shape[1] // k
+        self.stats.batches += 1
+        for idx, r in enumerate(batch):
+            z = logits[:, idx * out_w:(idx + 1) * out_w]
+            r.stats.batch_size = k
+            r.stats.t_queue = t0 - r.t_enqueue
+            r.stats.t_execute = t1 - t0
+            r.stats.latency = t1 - r.t_enqueue
+            r.stats.report = report
+            self.stats.requests.append(r.stats)
+            if not r.future.done():
+                r.future.set_result(z)
+
+    # ------------------------------------------------------ sync interface
+    def serve(self, requests: Iterable[tuple[str, object]],
+              *, arrival_delay_s: float = 0.0) -> list[jnp.ndarray]:
+        """Blocking convenience: submit ``(graph_id, features)`` pairs as
+        concurrent requests, return logits in submission order.  Requests
+        submitted in one call coalesce exactly as live traffic would."""
+        reqs = list(requests)
+
+        async def _run() -> Sequence[jnp.ndarray]:
+            tasks = []
+            for gid, h in reqs:
+                tasks.append(asyncio.ensure_future(self.infer(gid, h)))
+                if arrival_delay_s:
+                    await asyncio.sleep(arrival_delay_s)
+            return await asyncio.gather(*tasks)
+
+        return list(asyncio.run(_run()))

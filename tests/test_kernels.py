@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.formats import pack_blockcsr
+from repro.kernels.formats import pack_blockcsr, pack_blockcsr_coo
 
 jax.config.update("jax_enable_x64", False)
 
@@ -137,3 +137,60 @@ def test_blockcsr_roundtrip():
     a_dense = _rand(40, 24, np.float32, density=0.25)
     a = pack_blockcsr(a_dense, 8)
     np.testing.assert_allclose(np.asarray(a.todense()), a_dense, atol=0)
+
+
+# ------------------------------------------------- COO packing (no densify)
+def _assert_blockcsr_identical(a, b):
+    assert a.shape == b.shape and a.block_size == b.block_size
+    assert a.nnzb == b.nnzb
+    np.testing.assert_array_equal(np.asarray(a.row_ids), np.asarray(b.row_ids))
+    np.testing.assert_array_equal(np.asarray(a.col_ids), np.asarray(b.col_ids))
+    np.testing.assert_array_equal(np.asarray(a.first), np.asarray(b.first))
+    # bit-identical blocks, not allclose: COO packing must sum duplicates in
+    # triplet order exactly like np.add.at on the densified matrix
+    np.testing.assert_array_equal(np.asarray(a.blocks), np.asarray(b.blocks))
+
+
+@pytest.mark.parametrize("m,k,eps", [(40, 24, 0.0), (37, 21, 0.0),
+                                     (64, 64, 1e-6)])
+def test_pack_blockcsr_coo_bit_identical_to_dense_path(m, k, eps):
+    dense = _rand(m, k, np.float32, density=0.15)
+    if eps > 0:   # sprinkle sub-eps values that must not resurrect a block
+        dense[dense == 0] = np.where(
+            RNG.uniform(size=(dense == 0).sum()) < 0.2, 1e-9, 0.0
+        ).astype(np.float32)
+    r, c = np.nonzero(dense)
+    got = pack_blockcsr_coo((m, k), r.astype(np.int32), c.astype(np.int32),
+                            dense[r, c], 8, eps=eps)
+    want = pack_blockcsr(dense, 8, eps=eps)
+    _assert_blockcsr_identical(got, want)
+
+
+def test_pack_blockcsr_coo_duplicates_sum_in_order():
+    # duplicate coordinates: the dense oracle accumulates with np.add.at in
+    # triplet order; the COO pack must produce the same float32 bit pattern
+    rows = np.array([0, 0, 5, 0, 5], dtype=np.int32)
+    cols = np.array([1, 1, 3, 1, 3], dtype=np.int32)
+    vals = np.array([0.1, 0.7, -0.3, 1e-8, 0.30000001], dtype=np.float32)
+    dense = np.zeros((8, 8), np.float32)
+    np.add.at(dense, (rows, cols), vals)
+    got = pack_blockcsr_coo((8, 8), rows, cols, vals, 4)
+    want = pack_blockcsr(dense, 4)
+    _assert_blockcsr_identical(got, want)
+
+
+def test_pack_blockcsr_coo_rejects_out_of_bounds():
+    for bad_r, bad_c in [(-1, 0), (16, 0), (0, -2), (0, 8)]:
+        with pytest.raises(ValueError, match="out of bounds"):
+            pack_blockcsr_coo((16, 8), np.array([bad_r], np.int32),
+                              np.array([bad_c], np.int32),
+                              np.ones(1, np.float32), 8)
+
+
+def test_pack_blockcsr_coo_empty_and_capacity():
+    got = pack_blockcsr_coo((16, 8), np.zeros(0, np.int32),
+                            np.zeros(0, np.int32), np.zeros(0, np.float32),
+                            8, capacity=4)
+    want = pack_blockcsr(np.zeros((16, 8), np.float32), 8, capacity=4)
+    _assert_blockcsr_identical(got, want)
+    assert got.stored_blocks == 4 and got.nnzb == 2  # one zero block per row

@@ -63,10 +63,6 @@ _SCRIPT = textwrap.dedent("""
 
 @pytest.fixture(scope="module")
 def results():
-    import jax.sharding
-    if not hasattr(jax.sharding, "AxisType"):
-        pytest.skip("launch.mesh needs jax.sharding.AxisType "
-                    "(absent in the pinned jax 0.4.37)")
     env = dict(os.environ,
                PYTHONPATH=os.path.abspath(
                    os.path.join(os.path.dirname(__file__), "..", "src")))

@@ -1,0 +1,198 @@
+"""Serving subsystem: async micro-batched inference equivalence + stats.
+
+The load-bearing property: a micro-batch of k stacked requests produces,
+per request, the SAME logits as a per-request ``run_reference`` — the
+column-stack / row-unstack transport around the engine kernels never mixes
+requests.  Plus: coalescing behaviour, per-request stats, density-drift
+replanning, and the run_serving thin-wrapper contract.
+"""
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DynasparseEngine, SparseCOO
+from repro.models import gnn
+from repro.serving import (ServingConfig, ServingEngine, SharedPlanCache,
+                           SketchConfig)
+
+RNG = np.random.default_rng(7)
+
+
+def _rand_graph(n=80, nnz=240, seed=5):
+    rng = np.random.default_rng(seed)
+    flat = np.sort(rng.choice(n * n, size=nnz, replace=False))
+    return SparseCOO((n, n),
+                     jnp.asarray((flat // n).astype(np.int32)),
+                     jnp.asarray((flat % n).astype(np.int32)),
+                     jnp.asarray(np.abs(rng.normal(size=nnz)
+                                        ).astype(np.float32)),
+                     tag="adjacency")
+
+
+def _serving(model, params, *, max_batch=4, literal=True,
+             drift=0.25, cache=None):
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=literal,
+                           cache=cache if cache is not None
+                           else SharedPlanCache())
+    cfg = ServingConfig(max_batch=max_batch,
+                        sketch=SketchConfig(threshold=drift))
+    return ServingEngine(model, params, engine=eng, config=cfg)
+
+
+# ------------------------------------------------------------ equivalence
+@pytest.mark.parametrize("model", gnn.MODELS)
+def test_micro_batched_matches_per_request_reference(model):
+    adj = _rand_graph()
+    params = gnn.init_params(model, 12, 8, 5)
+    srv = _serving(model, params, max_batch=4)
+    srv.register_graph("g", adj)
+    batches = [RNG.normal(size=(80, 12)).astype(np.float32)
+               for _ in range(6)]
+    outs = srv.serve(("g", h) for h in batches)
+    assert srv.stats.batches < len(batches)          # actually coalesced
+    for h, z in zip(batches, outs):
+        ref = gnn.run_reference(model, adj, jnp.asarray(h), params)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_coalescing_respects_max_batch_and_records_stats():
+    adj = _rand_graph(seed=9)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=4)
+    srv.register_graph("g", adj)
+    srv.serve(("g", RNG.normal(size=(80, 12)).astype(np.float32))
+              for _ in range(10))
+    stats = srv.stats
+    assert len(stats.requests) == 10
+    assert stats.batches == 3                         # 4 + 4 + 2
+    assert sorted(r.batch_size for r in stats.requests) == [2, 2] + [4] * 8
+    assert all(r.latency >= r.t_queue >= 0.0 for r in stats.requests)
+    assert all(r.report is not None for r in stats.requests)
+    depths = [r.queue_depth for r in stats.requests]
+    assert max(depths) > 0                            # queue actually built up
+    pct = stats.latency_percentiles()
+    assert pct["p95"] >= pct["p50"] > 0.0
+
+
+def test_one_plan_execute_pass_per_micro_batch():
+    """k coalesced requests must issue ONE engine kernel sequence, not k."""
+    adj = _rand_graph(seed=3)
+    params = gnn.init_params("GCN", 12, 8, 8)
+    srv = _serving("GCN", params, max_batch=8)
+    srv.register_graph("g", adj)
+    srv.serve(("g", RNG.normal(size=(80, 12)).astype(np.float32))
+              for _ in range(8))
+    assert srv.stats.batches == 1
+    # the shared micro-batch report holds one kernel sequence (4 GCN mms)
+    rep = srv.stats.requests[0].report
+    assert len(rep.kernels) == 4
+
+
+def test_multi_graph_requests_do_not_mix():
+    adj_a, adj_b = _rand_graph(seed=1), _rand_graph(seed=2)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    cache = SharedPlanCache()
+    srv = _serving("GCN", params, max_batch=4, cache=cache)
+    srv.register_graph("a", adj_a)
+    srv.register_graph("b", adj_b)
+    h = RNG.normal(size=(80, 12)).astype(np.float32)
+    outs = srv.serve([("a", h), ("b", h), ("a", h)])
+    ref_a = gnn.run_reference("GCN", adj_a, jnp.asarray(h), params)
+    ref_b = gnn.run_reference("GCN", adj_b, jnp.asarray(h), params)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref_a),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(ref_b),
+                               rtol=1e-3, atol=1e-3)
+    # same request content ⇒ same answer (up to primitive choice: the
+    # balanced strategy may route a tile of one copy to the other queue)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[2]),
+                               rtol=1e-5, atol=1e-5)
+    assert set(cache.graphs) == {"a", "b"}
+
+
+def test_unregistered_graph_raises():
+    srv = _serving("GCN", gnn.init_params("GCN", 12, 8, 5))
+    with pytest.raises(KeyError, match="not registered"):
+        asyncio.run(srv.infer("nope", np.zeros((4, 12), np.float32)))
+
+
+def test_dispatch_error_fails_requests_instead_of_hanging():
+    """An engine-side error inside a micro-batch must surface as the
+    requests' exception — never strand their futures (serve() deadlock)."""
+    adj = _rand_graph(seed=4)
+    srv = _serving("GCN", gnn.init_params("GCN", 10, 8, 5), max_batch=2)
+    srv.register_graph("g", adj)
+    bad = RNG.normal(size=(80, 7)).astype(np.float32)   # fan-in mismatch
+    with pytest.raises(ValueError):
+        srv.serve([("g", bad), ("g", bad)])
+
+
+def test_run_serving_restores_engine_drift_settings():
+    adj = _rand_graph(seed=5)
+    params = gnn.init_params("SGC", 10, 8, 8)
+    eng = DynasparseEngine(tile_m=16, tile_n=8)
+    assert eng.drift_threshold is None
+    gnn.run_serving("SGC", eng, adj,
+                    [RNG.normal(size=(80, 10)).astype(np.float32)], params)
+    assert eng.drift_threshold is None      # no hidden mutation
+
+
+
+# ------------------------------------------------------- density drift
+def test_density_drift_triggers_replan_and_matches_reference():
+    """Near-dense features swapped mid-stream: the sketch must catch the
+    stale cached Y-densities, replan, and the result must stay exact."""
+    adj = _rand_graph(seed=11)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    cache = SharedPlanCache()
+    srv = _serving("GCN", params, max_batch=1, cache=cache)
+    srv.register_graph("g", adj)
+
+    sparse_h = (RNG.normal(size=(80, 12)) *
+                (RNG.uniform(size=(80, 12)) < 0.03)).astype(np.float32)
+    dense_h = RNG.normal(size=(80, 12)).astype(np.float32)
+    outs = srv.serve([("g", sparse_h), ("g", sparse_h), ("g", dense_h)])
+
+    assert cache.stats.replans > 0                   # drift was caught
+    ref = gnn.run_reference("GCN", adj, jnp.asarray(dense_h), params)
+    np.testing.assert_allclose(np.asarray(outs[2]), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_no_drift_no_replan():
+    adj = _rand_graph(seed=12)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    cache = SharedPlanCache()
+    srv = _serving("GCN", params, max_batch=1, cache=cache)
+    srv.register_graph("g", adj)
+    h = RNG.normal(size=(80, 12)).astype(np.float32)
+    srv.serve([("g", h), ("g", h), ("g", h)])
+    assert cache.stats.replans == 0
+    assert cache.stats.plan_hits > 0                 # amortization intact
+
+
+# ------------------------------------------------------- wrapper contract
+def test_run_serving_wrapper_per_request_and_micro_batched():
+    adj = _rand_graph(seed=21)
+    params = gnn.init_params("SGC", 10, 8, 8)
+    batches = [RNG.normal(size=(80, 10)).astype(np.float32)
+               for _ in range(4)]
+
+    outs1, reports1 = gnn.run_serving(
+        "SGC", DynasparseEngine(tile_m=16, tile_n=8), adj, batches, params)
+    outs4, reports4 = gnn.run_serving(
+        "SGC", DynasparseEngine(tile_m=16, tile_n=8), adj, batches, params,
+        max_batch=4)
+    assert len(outs1) == len(outs4) == len(reports1) == len(reports4) == 4
+    for h, z1, z4 in zip(batches, outs1, outs4):
+        ref = gnn.run_reference("SGC", adj, jnp.asarray(h), params)
+        np.testing.assert_allclose(np.asarray(z1), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(z4), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+    # micro-batched: one engine pass for all four requests
+    assert reports4[0] is reports4[3]
+    assert reports1[0] is not reports1[3]

@@ -49,9 +49,9 @@ _SCRIPT = textwrap.dedent("""
     out["params_maxdiff"] = float(np.abs(w1 - w2).max())
 
     # ---- 2) pipeline parallelism equivalence
+    from repro import compat
     from repro.distributed.pipeline import pipeline_apply
-    pmesh = jax.make_mesh((4,), ("pipe",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    pmesh = compat.make_mesh((4,), ("pipe",))
     def stage_fn(w, x):
         return jnp.tanh(x @ w)
     ws = jnp.asarray(rng.normal(size=(4, 16, 16)).astype(np.float32)) * 0.5
@@ -65,11 +65,10 @@ _SCRIPT = textwrap.dedent("""
     # ---- 3) int8 psum via shard_map
     from repro.optim.compression import psum8
     from jax.sharding import PartitionSpec as P
-    dmesh = jax.make_mesh((8,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    dmesh = compat.make_mesh((8,), ("data",))
     x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
-    f = jax.shard_map(lambda v: psum8(v, "data"), mesh=dmesh,
-                      in_specs=P("data"), out_specs=P(), check_vma=False)
+    f = compat.shard_map(lambda v: psum8(v, "data"), mesh=dmesh,
+                         in_specs=P("data"), out_specs=P(), check=False)
     got8 = np.asarray(f(x))[0]
     want8 = np.asarray(x.sum(0))
     # worst-case quantization budget: n_ranks x 0.5 ulp x shared scale
@@ -100,10 +99,6 @@ _SCRIPT = textwrap.dedent("""
 
 @pytest.fixture(scope="module")
 def spmd_results():
-    import jax.sharding
-    if not hasattr(jax.sharding, "AxisType"):
-        pytest.skip("launch.mesh needs jax.sharding.AxisType "
-                    "(absent in the pinned jax 0.4.37)")
     env = dict(os.environ,
                PYTHONPATH=os.path.abspath(
                    os.path.join(os.path.dirname(__file__), "..", "src")))

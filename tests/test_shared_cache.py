@@ -1,0 +1,185 @@
+"""SharedPlanCache: byte-accounted LRU eviction, multi-graph keying,
+persistence round-trips, and the lazy-densify structure entries."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DynasparseEngine, SparseCOO
+from repro.core.plancache import PlanCache, nbytes_of
+from repro.models import gnn
+from repro.serving import (GraphKey, SharedPlanCache, get_shared_cache,
+                           set_shared_cache)
+
+RNG = np.random.default_rng(31)
+
+
+def _rand_graph(n=64, nnz=180, seed=5):
+    rng = np.random.default_rng(seed)
+    flat = np.sort(rng.choice(n * n, size=nnz, replace=False))
+    return SparseCOO((n, n),
+                     jnp.asarray((flat // n).astype(np.int32)),
+                     jnp.asarray((flat % n).astype(np.int32)),
+                     jnp.asarray(np.abs(rng.normal(size=nnz)
+                                        ).astype(np.float32)),
+                     tag="adjacency")
+
+
+# ------------------------------------------------------------ byte account
+def test_nbytes_counts_array_payload():
+    assert nbytes_of(np.zeros((4, 4), np.float32)) == 64
+    assert nbytes_of({"a": np.zeros(2, np.float64), "b": [1, 2]}) >= 32
+    assert nbytes_of(None) > 0
+
+
+def test_bytes_used_tracks_puts_and_eviction_by_bytes():
+    c = PlanCache(capacity=1000, max_bytes=1000)
+    c._put("density", ("a",), np.zeros(100, np.float64))   # 800 B
+    assert c.bytes_used == 800
+    c._put("density", ("b",), np.zeros(100, np.float64))   # over budget
+    assert c.stats.evictions == 1
+    assert c.bytes_used == 800                             # 'a' evicted
+    assert c._get("density", ("a",)) is None
+    assert c._get("density", ("b",)) is not None
+    assert c.stats.bytes_evicted == 800
+
+
+def test_lru_order_spans_entry_kinds():
+    c = PlanCache(capacity=1000, max_bytes=2000)
+    c._put("density", ("cold",), np.zeros(100, np.float64))
+    c._put("plan", ("hot",), np.zeros(100, np.float64))
+    c._get("density", ("cold",))        # touch: 'cold' is now most recent
+    c._put("struct", ("new",), np.zeros(100, np.float64))  # evicts 'hot'
+    assert c._get("plan", ("hot",)) is None
+    assert c._get("density", ("cold",)) is not None
+
+
+def test_engine_respects_byte_budget_across_graphs():
+    """Many distinct graphs through a tiny byte budget: the cache must stay
+    under budget and keep serving correct results."""
+    cache = SharedPlanCache(capacity=10_000, max_bytes=64 * 1024)
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache)
+    h = RNG.normal(size=(64, 8)).astype(np.float32)
+    for seed in range(6):
+        adj = _rand_graph(seed=100 + seed)
+        z, _ = eng.matmul(adj, jnp.asarray(h), name=f"g{seed}")
+        np.testing.assert_allclose(np.asarray(z), adj.todense() @ h,
+                                   rtol=1e-4, atol=1e-4)
+    assert cache.bytes_used <= 64 * 1024
+    assert cache.stats.evictions > 0
+
+
+# ------------------------------------------------------------- multi-graph
+def test_graph_registry_keys_on_content():
+    cache = SharedPlanCache()
+    a, b = _rand_graph(seed=1), _rand_graph(seed=2)
+    ka = cache.register_graph("a", a)
+    kb = cache.register_graph("b", b)
+    assert isinstance(ka, GraphKey) and ka != kb
+    assert ka.shape == (64, 64) and ka.dtype == "float32"
+    assert cache.register_graph("a2", a) == ka      # same content, same key
+    # re-registering an id with new content updates the registry
+    assert cache.register_graph("a", b) == kb
+    assert cache.graphs["a"] == kb
+
+
+def test_two_engines_share_one_packing():
+    cache = SharedPlanCache()
+    adj = _rand_graph(seed=3)
+    h = RNG.normal(size=(64, 8)).astype(np.float32)
+    e1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache)
+    e2 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache)
+    e1.matmul(adj, jnp.asarray(h))
+    e2.matmul(adj, jnp.asarray(h))
+    assert cache.stats.packs == 1                   # second engine: all hits
+    assert cache.stats.analyzes == 1
+    assert cache.stats.plan_hits == 1
+
+
+def test_shared_singleton_roundtrip():
+    try:
+        set_shared_cache(None)
+        c = get_shared_cache()
+        assert get_shared_cache() is c
+        mine = SharedPlanCache()
+        set_shared_cache(mine)
+        assert get_shared_cache() is mine
+    finally:
+        set_shared_cache(None)
+
+
+# ------------------------------------------------------------- persistence
+def test_save_load_skips_reanalysis(tmp_path):
+    adj = _rand_graph(seed=7)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    h = RNG.normal(size=(64, 12)).astype(np.float32)
+
+    c1 = SharedPlanCache()
+    e1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=c1)
+    z1, _ = gnn.run_inference("GCN", e1, adj, jnp.asarray(h), params)
+    path = os.fspath(tmp_path / "plans.pkl")
+    manifest = c1.save(path)
+    assert manifest["entries"] == len(c1) and manifest["bytes"] > 0
+
+    c2 = SharedPlanCache()
+    assert c2.load(path)["entries"] == manifest["entries"]
+    e2 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=c2)
+    z2, _ = gnn.run_inference("GCN", e2, adj, jnp.asarray(h), params)
+    # restart: zero re-analysis, zero re-packing, identical results
+    assert c2.stats.packs == 0 and c2.stats.analyzes == 0
+    assert c2.stats.plan_misses == 0
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
+def test_load_restores_device_resident_structures(tmp_path):
+    """Restored packed stripes must be device arrays — the hot path may not
+    pay a host->device upload per micro-batch after a restart."""
+    import jax
+    adj = _rand_graph(seed=8)
+    c1 = SharedPlanCache()
+    e1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=c1)
+    e1.matmul(adj, jnp.asarray(RNG.normal(size=(64, 8)).astype(np.float32)))
+    path = os.fspath(tmp_path / "p.pkl")
+    c1.save(path)
+    c2 = SharedPlanCache()
+    c2.load(path)
+    structs = [v for (kind, _), v in c2.items() if kind == "struct"]
+    assert structs, "no structure entries restored"
+    for s in structs:
+        for bcsr in s.stripes.values():
+            assert isinstance(bcsr.blocks, jax.Array)
+            assert isinstance(bcsr.row_ids, jax.Array)
+
+
+def test_load_rejects_unknown_version(tmp_path):
+    import pickle
+    path = os.fspath(tmp_path / "bad.pkl")
+    with open(path, "wb") as f:
+        pickle.dump({"version": 999, "entries": [], "graphs": {}}, f)
+    with pytest.raises(ValueError, match="snapshot version"):
+        SharedPlanCache().load(path)
+
+
+# ----------------------------------------------------------- lazy densify
+def test_structure_entry_densifies_only_for_dense_queue():
+    """An all-sparse plan must never materialize the dense adjacency; the
+    byte account must grow when a dense-queue plan forces it."""
+    adj = _rand_graph(seed=9)                        # very sparse: all-STQ
+    cache = SharedPlanCache()
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True,
+                           mode="sparse_only", cache=cache)
+    h = RNG.normal(size=(64, 8)).astype(np.float32)
+    eng.matmul(adj, jnp.asarray(h))
+    entries = {k: v for k, v in cache.items()}
+    structs = [v for (kind, _), v in entries.items() if kind == "struct"]
+    assert len(structs) == 1 and structs[0].dense is None
+
+    bytes_before = cache.bytes_used
+    eng_d = DynasparseEngine(tile_m=16, tile_n=8, literal=True,
+                             mode="dense_only", cache=cache)
+    z, _ = eng_d.matmul(adj, jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(z), adj.todense() @ h,
+                               rtol=1e-4, atol=1e-4)
+    assert structs[0].dense is not None              # materialized on demand
+    assert cache.bytes_used > bytes_before           # and re-accounted
