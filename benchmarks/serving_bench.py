@@ -13,9 +13,15 @@ interpret mode on CPU):
    is pallas LAUNCHES PER REQUEST, which micro-batching must reduce.
 3. **density_drift** — near-dense features swapped mid-stream must trigger
    the sketch's replan AND still match the pure-jnp reference.
+4. **mixed_batch** — bursts of varying size served through the padded
+   single-plan path: every burst is padded to the ``max_batch`` stacked
+   width (replicating its own feature columns), so the whole scenario must leave exactly ONE plan entry
+   per graph in the cache (the GraphAGILE compile-once/serve-many gate)
+   while still matching the per-request results.
 
 Emits a machine-readable JSON blob (p50/p95 latency, cache hit rate,
-launches per request, drift outcome) for CI trend tracking.
+launches per request, plans per graph, drift outcome) for CI trend
+tracking.
 """
 from __future__ import annotations
 
@@ -112,6 +118,42 @@ def run(requests: int = 32, max_batch: int = 8, model: str = "GCN",
     out["micro_batched"]["max_abs_err_vs_per_request"] = err
     out["launch_reduction"] = (out["per_request"]["launches_per_request"] /
                                out["micro_batched"]["launches_per_request"])
+    srv.close()
+
+    # -------- 4) mixed batch sizes through the padded single-plan path
+    cache = SharedPlanCache()
+    srv = ServingEngine(model, params,
+                        engine=DynasparseEngine(tile_m=32, tile_n=8,
+                                                literal=True, cache=cache),
+                        config=ServingConfig(max_batch=max_batch))
+    srv.register_graph("bench", adj)
+    sizes = [1, 3, max_batch, 2, max(1, max_batch - 1), 1, 4, max_batch]
+    sizes = [max(1, min(s, max_batch)) for s in sizes]
+    ops.reset_pallas_call_count()
+    outs_mixed = []
+    for s in sizes:
+        idx = len(outs_mixed)
+        outs_mixed += srv.serve(
+            ("bench", batches[(idx + i) % len(batches)]) for i in range(s))
+    n_mixed = len(outs_mixed)
+    launches_mixed = ops.pallas_call_count()
+    err_mixed = max(
+        float(np.max(np.abs(np.asarray(z) -
+                            np.asarray(outs_seq[i % len(outs_seq)]))))
+        for i, z in enumerate(outs_mixed))
+    out["mixed_batch"] = {
+        "batch_sizes": sizes,
+        "requests": n_mixed,
+        "batches": srv.stats.batches,
+        "plans_per_graph": cache.plan_count(),
+        # padded partial batches must not register as density drift either:
+        # one plan entry AND zero replans across mixed traffic shapes
+        "replans": cache.stats.replans,
+        "pallas_launches": launches_mixed,
+        "launches_per_request": launches_mixed / n_mixed,
+        "max_abs_err_vs_per_request": err_mixed,
+    }
+    srv.close()
 
     # -------- 3) density-drift scenario: near-dense swap mid-stream
     cache = SharedPlanCache()
@@ -135,6 +177,7 @@ def run(requests: int = 32, max_batch: int = 8, model: str = "GCN",
         "max_abs_err_vs_reference": drift_err,
         "matches_reference": drift_err < 1e-3,
     }
+    srv.close()
     return out
 
 
@@ -156,12 +199,20 @@ def main() -> None:
     print(f"[serving_bench] wrote {args.out}")
     print(json.dumps({k: res[k] for k in
                       ("launch_reduction", "per_request", "micro_batched",
-                       "density_drift")}, indent=2))
+                       "mixed_batch", "density_drift")}, indent=2))
     if args.check:
         ok = (res["launch_reduction"] > 1.0
               and res["density_drift"]["replan_triggered"]
               and res["density_drift"]["matches_reference"]
-              and res["micro_batched"]["max_abs_err_vs_per_request"] < 1e-3)
+              and res["micro_batched"]["max_abs_err_vs_per_request"] < 1e-3
+              # single-plan serving: mixed batch sizes leave ONE plan entry
+              # per graph, trigger zero drift replans, and still reduce
+              # per-request pallas launches
+              and res["mixed_batch"]["plans_per_graph"] == 1
+              and res["mixed_batch"]["replans"] == 0
+              and res["mixed_batch"]["max_abs_err_vs_per_request"] < 1e-3
+              and (res["mixed_batch"]["launches_per_request"]
+                   < res["per_request"]["launches_per_request"]))
         if not ok:
             raise SystemExit("[serving_bench] acceptance check FAILED")
         print("[serving_bench] acceptance check passed")

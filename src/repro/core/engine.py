@@ -69,6 +69,20 @@ class EngineReport:
         two queues internally)."""
         return sum(r.makespan for _, r in self.kernels)
 
+    def attributed(self, k: int) -> "EngineReport":
+        """An even per-request share of a micro-batch report: every kernel's
+        cost fields are divided by ``k`` (the batch's request count), so
+        ``hardware_time``/FLOPs sum back to the batch total across its
+        requests.  The kernel list and task counts still describe the shared
+        fused launches.  ``k <= 1`` returns ``self`` — a batch of one IS the
+        request."""
+        if k <= 1:
+            return self
+        s = 1.0 / k
+        return EngineReport(
+            kernels=[(name, rep.scaled(s)) for name, rep in self.kernels],
+            meta=list(self.meta))
+
 
 class DynasparseEngine:
     def __init__(

@@ -223,6 +223,13 @@ class PlanCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def plan_count(self) -> int:
+        """Number of cached plan-level entries.  The serving layer's
+        single-plan gate: with ``pad_to_max_batch`` every registered graph
+        contributes exactly one plan per distinct kernel geometry,
+        regardless of traffic shape."""
+        return sum(1 for (kind, _key) in self._entries if kind == self._PLAN)
+
     def items(self) -> Iterator[tuple[tuple, object]]:
         """(kind, key) -> value pairs in LRU order (persistence hook)."""
         for (kind, key), (value, _) in self._entries.items():

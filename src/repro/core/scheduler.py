@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 
 import jax.numpy as jnp
 import numpy as np
@@ -66,6 +67,22 @@ class ScheduleReport:
             data_loaded=self.data_loaded + other.data_loaded,
             data_dense_equiv=self.data_dense_equiv + other.data_dense_equiv,
             memory_time=self.memory_time + other.memory_time,
+        )
+
+    def scaled(self, s: float) -> "ScheduleReport":
+        """Cost fields scaled by ``s`` — the per-request attribution the
+        serving layer uses for a micro-batch share.  The task / primitive
+        counts describe the shared fused launches and are left intact."""
+        return dataclasses.replace(
+            self,
+            makespan=self.makespan * s,
+            t_sparse_busy=self.t_sparse_busy * s,
+            t_dense_busy=self.t_dense_busy * s,
+            flops_executed=self.flops_executed * s,
+            flops_dense_equiv=self.flops_dense_equiv * s,
+            data_loaded=self.data_loaded * s,
+            data_dense_equiv=self.data_dense_equiv * s,
+            memory_time=self.memory_time * s,
         )
 
 
@@ -129,8 +146,10 @@ def execute_plan(
     Queue becomes ONE padded ``(n_tasks, tm, tn)`` GEMM launch, and the
     Sparse Task Queue's SpDMM / SpMM tasks are flattened into one entry /
     triple list each, driving a single fused kernel launch per primitive —
-    O(primitives) pallas calls per kernel instead of O(tasks) — with output
-    tiles assembled on device via ``jnp.zeros(...).at[].set``.
+    O(primitives) pallas calls per kernel instead of O(tasks).  Each fused
+    kernel's output index map scatters its tasks' tiles directly into ONE
+    shared padded ``(M, N)`` canvas (aliased through the chain of
+    primitives), so assembly is a single slice — no per-task scatter.
 
     ``packed`` optionally supplies pre-packed BlockCSR row-stripes of ``x``
     (index -> BlockCSR), the PlanCache's amortized §III-B preprocessing;
@@ -146,15 +165,19 @@ def execute_plan(
         return _execute_batched(part, stq, dtq, x, y, block=block,
                                 interpret=interpret, packed=packed, eps=eps)
     return _execute_pertask(part, stq, dtq, x, y, block=block,
-                            interpret=interpret, eps=eps)
+                            interpret=interpret, eps=eps, packed=packed)
 
 
-def _execute_pertask(part, stq, dtq, x, y, *, block, interpret, eps=0.0):
-    x = jnp.asarray(x)
+def _execute_pertask(part, stq, dtq, x, y, *, block, interpret, eps=0.0,
+                     packed=None):
+    x = None if x is None else jnp.asarray(x)
     y = jnp.asarray(y)
     z = np.zeros((part.M, part.N), dtype=np.float32)
     tm, tn = part.tile_m, part.tile_n
 
+    if dtq and x is None:
+        raise ValueError("execute_plan: dense-queue tasks need the "
+                         "densified x operand (got x=None)")
     for task in dtq:  # dense engine: MXU GEMM
         xs = x[task.i * tm:(task.i + 1) * tm, :]
         ys = y[:, task.j * tn:(task.j + 1) * tn]
@@ -164,16 +187,25 @@ def _execute_pertask(part, stq, dtq, x, y, *, block, interpret, eps=0.0):
           task.j * tn: task.j * tn + ys.shape[1]] = np.asarray(z_tile)
 
     for task in stq:  # sparse engine: block-skip kernels
-        xs = np.asarray(x[task.i * tm:(task.i + 1) * tm, :])
+        if packed is not None and task.i in packed:
+            x_bcsr = packed[task.i]
+        elif x is None:
+            raise ValueError(
+                f"execute_plan: row-stripe {task.i} is missing from `packed` "
+                "and no dense x was supplied to pack it from")
+        else:
+            x_bcsr = pack_blockcsr(
+                np.asarray(x[task.i * tm:(task.i + 1) * tm, :]), block,
+                eps=eps)
+        mi = part.row_extent(task.i)
         ys = y[:, task.j * tn:(task.j + 1) * tn]
-        x_bcsr = pack_blockcsr(xs, block, eps=eps)
         if task.primitive == "SpMM":
             y_bcsr = pack_blockcsr(np.asarray(ys), block, eps=eps)
             z_tile = ops.spmm(x_bcsr, y_bcsr, interpret=interpret)
         else:
             z_tile = ops.spdmm(x_bcsr, ys, bn=min(128, -(-ys.shape[1] // 8) * 8),
                                interpret=interpret)
-        z[task.i * tm: task.i * tm + xs.shape[0],
+        z[task.i * tm: task.i * tm + mi,
           task.j * tn: task.j * tn + ys.shape[1]] = np.asarray(z_tile)
 
     return jnp.asarray(z)
@@ -181,15 +213,42 @@ def _execute_pertask(part, stq, dtq, x, y, *, block, interpret, eps=0.0):
 
 def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
                      eps=0.0):
-    """Per-queue fused dispatch; see ``execute_plan``."""
+    """Per-queue fused dispatch with in-place output assembly.
+
+    ONE ``(M_pad, N_pad)`` canvas holds the final padded layout of the
+    partition: row-stripe ``i`` occupies rows ``[i*SM, (i+1)*SM)`` and
+    col-stripe ``j`` columns ``[j*SN, (j+1)*SN)``, where the slot sizes
+    ``SM``/``SN`` equal the tile sizes (padded up only in the single-stripe
+    case).  Each fused kernel scatters its tasks' tiles directly into that
+    canvas through its output index map; the canvas is threaded through the
+    primitives via output aliasing, so blocks a primitive doesn't touch
+    keep what the previous primitive (or the zero init) left there.
+    Assembly is ``canvas[:M, :N]`` — no per-task scatter loops.
+    """
     tm, tn = part.tile_m, part.tile_n
     M, K, N = part.M, part.K, part.N
     nrt, nct = part.n_row_tiles, part.n_col_tiles
     B = block
-    R = -(-tm // B)                  # block-rows reserved per row-stripe slot
+
+    # The in-place index maps address the canvas in units of B-blocks (sparse
+    # kernels) and 8-lane groups (GEMM tiles), so every interior slot
+    # boundary i*SM / j*SN must be a multiple of lcm(B, 8).  The engine's
+    # default geometry satisfies this; constructor-supplied tile sizes that
+    # don't fall back to the equivalent per-task path (packed stripes are
+    # reused there, so a graph-scale x=None call still works).
+    align = math.lcm(B, 8)
+    SM = tm if tm % align == 0 else -(-tm // align) * align
+    SN = tn if tn % align == 0 else -(-tn // align) * align
+    if (nrt > 1 and SM != tm) or (nct > 1 and SN != tn):
+        return _execute_pertask(part, stq, dtq, x, y, block=B,
+                                interpret=interpret, eps=eps, packed=packed)
+
+    R = SM // B                      # block-rows per row-stripe slot
+    C = SN // B                      # block-cols per col-stripe slot
+    M_pad, N_pad = nrt * SM, nct * SN
     x = None if x is None else jnp.asarray(x)
     y = jnp.asarray(y)
-    z = jnp.zeros((M, N), dtype=jnp.float32)
+    z = jnp.zeros((M_pad, N_pad), dtype=jnp.float32)
 
     spdmm_tasks = [t for t in stq if t.primitive != "SpMM"]
     spmm_tasks = [t for t in stq if t.primitive == "SpMM"]
@@ -207,34 +266,30 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
             stripes[i] = pack_blockcsr(
                 np.asarray(x[i * tm:(i + 1) * tm, :]), B, eps=eps)
 
-    # ---------------- DTQ: one batched GEMM over all dense tiles
+    # ---------------- DTQ: one batched GEMM scattered into the canvas
     if dtq:
         if x is None:
             raise ValueError("execute_plan: dense-queue tasks need the "
                              "densified x operand (got x=None)")
-        task_is = np.array([t.i for t in dtq])
-        task_js = np.array([t.j for t in dtq])
-        x_p = jnp.pad(x, ((0, nrt * tm - M), (0, 0)))
-        y_p = jnp.pad(y, ((0, 0), (0, nct * tn - N)))
-        xs = x_p.reshape(nrt, tm, K)[task_is]
-        ys = jnp.moveaxis(y_p.reshape(K, nct, tn), 1, 0)[task_js]
-        z_tiles = ops.gemm_batch(xs, ys, interpret=interpret,
-                                 out_dtype=jnp.float32)
-        for t_idx, task in enumerate(dtq):
-            mi, dj = part.row_extent(task.i), part.col_extent(task.j)
-            z = z.at[task.i * tm: task.i * tm + mi,
-                     task.j * tn: task.j * tn + dj].set(
-                         z_tiles[t_idx, :mi, :dj])
+        task_is = np.array([t.i for t in dtq], dtype=np.int32)
+        task_js = np.array([t.j for t in dtq], dtype=np.int32)
+        x_p = jnp.pad(x, ((0, M_pad - M), (0, 0)))
+        y_p = jnp.pad(y, ((0, 0), (0, nct * tn - N))).reshape(K, nct, tn)
+        if SN != tn:
+            y_p = jnp.pad(y_p, ((0, 0), (0, 0), (0, SN - tn)))
+        xs = x_p.reshape(nrt, SM, K)[task_is]
+        ys = jnp.moveaxis(y_p, 1, 0)[task_js]
+        z = ops.gemm_batch_scatter(xs, ys, task_is, task_js, z,
+                                   interpret=interpret)
 
     # ---------------- STQ / SpDMM: one fused entry list
     if spdmm_tasks:
-        tn_p = -(-tn // 8) * 8
         ncb = -(-K // B)
-        # Y with each col-stripe padded to tn_p columns, K padded to blocks
+        # Y with each col-stripe padded to SN columns, K padded to blocks
         y_pad = jnp.pad(y, ((0, ncb * B - K), (0, nct * tn - N)))
         y_f = jnp.pad(y_pad.reshape(ncb * B, nct, tn),
-                      ((0, 0), (0, 0), (0, tn_p - tn))
-                      ).reshape(ncb * B, nct * tn_p)
+                      ((0, 0), (0, 0), (0, SN - tn))
+                      ).reshape(ncb * B, nct * SN)
         offsets: dict[int, int] = {}
         pool = []
         off = 0
@@ -257,24 +312,17 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
                              o + b, int(cols[b]), int(fir[b])))
                 seq += 1
         ents.sort()
-        z_sp = ops.spdmm_fused(
+        z = ops.spdmm_fused(
             a_pool, y_f,
             np.array([e[3] for e in ents], dtype=np.int32),
             np.array([e[4] for e in ents], dtype=np.int32),
             np.array([e[0] for e in ents], dtype=np.int32),
             np.array([e[1] for e in ents], dtype=np.int32),
             np.array([e[5] for e in ents], dtype=np.int32),
-            block_size=B, bn=tn_p, m_pad=nrt * R * B, interpret=interpret)
-        for task in spdmm_tasks:
-            mi, dj = part.row_extent(task.i), part.col_extent(task.j)
-            z = z.at[task.i * tm: task.i * tm + mi,
-                     task.j * tn: task.j * tn + dj].set(
-                         z_sp[task.i * R * B: task.i * R * B + mi,
-                              task.j * tn_p: task.j * tn_p + dj])
+            block_size=B, bn=SN, m_pad=M_pad, interpret=interpret, z=z)
 
     # ---------------- STQ / SpMM: one fused triple list
     if spmm_tasks:
-        C = -(-tn // B)              # block-cols reserved per col-stripe slot
         ystripes = {
             j: pack_blockcsr(np.asarray(y[:, j * tn:(j + 1) * tn]), B, eps=eps)
             for j in sorted({t.j for t in spmm_tasks})}
@@ -298,7 +346,7 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
         y_blocks = jnp.concatenate(
             y_pool + [jnp.zeros((1, B, B), y_pool[0].dtype)], axis=0)
 
-        trip = []  # (out_row, out_col, a_id, y_id), per-task regions
+        trip = []  # (out_row, out_col, a_id, y_id), per-task canvas regions
         for task in spmm_tasks:
             trip.extend(pair_block_triples(
                 stripes[task.i], ystripes[task.j],
@@ -310,19 +358,13 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
         trip.sort()
         out_rows = np.array([t[0] for t in trip], dtype=np.int32)
         out_cols = np.array([t[1] for t in trip], dtype=np.int32)
-        z_mm = ops.spmm_fused(
+        z = ops.spmm_fused(
             a_blocks, y_blocks,
             np.array([t[2] for t in trip], dtype=np.int32),
             np.array([t[3] for t in trip], dtype=np.int32),
             out_rows, out_cols,
             first_visit_flags(out_rows, out_cols),
-            block_size=B, m_pad=nrt * R * B, n_pad=nct * C * B,
-            interpret=interpret)
-        for task in spmm_tasks:
-            mi, dj = part.row_extent(task.i), part.col_extent(task.j)
-            z = z.at[task.i * tm: task.i * tm + mi,
-                     task.j * tn: task.j * tn + dj].set(
-                         z_mm[task.i * R * B: task.i * R * B + mi,
-                              task.j * C * B: task.j * C * B + dj])
+            block_size=B, m_pad=M_pad, n_pad=N_pad,
+            interpret=interpret, z=z)
 
-    return z
+    return z[:M, :N]

@@ -70,6 +70,79 @@ def gemm(
     )(x, y)
 
 
+def _gemm_batch_scatter_kernel(row_ref, col_ref, x_ref, y_ref, zin_ref, z_ref,
+                               acc_ref, *, n_k: int):
+    del row_ref, col_ref, zin_ref
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[0], y_ref[0], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        z_ref[...] = acc_ref[...].astype(z_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bk", "interpret")
+)
+def gemm_batch_scatter(
+    x: jax.Array,
+    y: jax.Array,
+    rows: jax.Array,
+    cols: jax.Array,
+    z: jax.Array,
+    *,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched tile GEMM with an in-place scatter output map.
+
+    Like :func:`gemm_batch`, but instead of returning a ``(T, m, n)`` stack
+    the output index map places task ``t``'s tile directly at tile
+    coordinates ``(rows[t], cols[t])`` of the caller's canvas ``z`` — the
+    final padded ``(M, N)`` layout of the plan's partition.  ``z`` is aliased
+    to the output, so tiles owned by other primitives (or by no task) keep
+    whatever ``z`` already holds; the scheduler's assembly is one slice
+    instead of a per-task ``.at[].set`` loop.  ``z`` dims must be multiples
+    of the tile dims ``(m, n)``.
+    """
+    t, m, k = x.shape
+    t2, k2, n = y.shape
+    assert t == t2 and k == k2, (x.shape, y.shape)
+    assert k % bk == 0, (k, bk)
+    mz, nz = z.shape
+    assert mz % m == 0 and nz % n == 0, (z.shape, (m, n))
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_gemm_batch_scatter_kernel, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(t, n_k),
+            in_specs=[
+                pl.BlockSpec((1, m, bk), lambda i, kk, rows, cols: (i, 0, kk)),
+                pl.BlockSpec((1, bk, n), lambda i, kk, rows, cols: (i, kk, 0)),
+                # canvas input, aliased to the output buffer: the kernel
+                # never reads it, so it stays in HBM (no per-step DMA)
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec(
+                (m, n), lambda i, kk, rows, cols: (rows[i], cols[i])
+            ),
+            scratch_shapes=[pltpu.VMEM((m, n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct(z.shape, z.dtype),
+        input_output_aliases={4: 0},    # 2 scalar-prefetch + x + y -> z
+        interpret=interpret,
+    )(rows, cols, x, y, z)
+
+
 def _gemm_batch_kernel(x_ref, y_ref, z_ref, acc_ref, *, n_k: int):
     k = pl.program_id(1)
 

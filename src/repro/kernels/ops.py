@@ -91,6 +91,28 @@ def gemm_batch(x, y, *, bk: int = 128, interpret: bool | None = None,
     return out[:, :m, :n]
 
 
+def gemm_batch_scatter(x, y, rows, cols, z, *, bk: int = 128,
+                       interpret: bool | None = None):
+    """Batched tile GEMM scattered in place: ``z`` at tile coords
+    ``(rows[t], cols[t])`` receives ``x[t] @ y[t]`` — one pallas_call, no
+    host-side reassembly.  ``x`` is ``(T, m, k)``, ``y`` is ``(T, k, n)``
+    and ``z``'s dims must be multiples of ``(m, n)`` (the scheduler's padded
+    canvas guarantees this); tiles of ``z`` no task addresses keep their
+    content (aliased output)."""
+    interpret = default_interpret() if interpret is None else interpret
+    t, m, k = x.shape
+    t2, k2, n = y.shape
+    assert t == t2 and k == k2, (x.shape, y.shape)
+    bk_ = min(bk, _round_up(k, 8))
+    kp = _round_up(k, bk_)
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, kp - k)))
+    y = jnp.pad(y, ((0, 0), (0, kp - k), (0, 0)))
+    _count_call()
+    return _gemm.gemm_batch_scatter(
+        x, y, jnp.asarray(rows, dtype=jnp.int32),
+        jnp.asarray(cols, dtype=jnp.int32), z, bk=bk_, interpret=interpret)
+
+
 def spdmm(a: BlockCSR, y, *, bn: int = 128, interpret: bool | None = None,
           out_dtype=jnp.float32):
     """Block-sparse ``a @ y`` (pads Y, slices output to logical shape)."""
@@ -109,10 +131,12 @@ def spdmm(a: BlockCSR, y, *, bn: int = 128, interpret: bool | None = None,
 
 def spdmm_fused(a_blocks, y, a_ids, y_rows, out_rows, out_cols, first, *,
                 block_size: int, bn: int, m_pad: int,
-                interpret: bool | None = None, out_dtype=jnp.float32):
+                interpret: bool | None = None, out_dtype=jnp.float32,
+                z=None):
     """Fused multi-task SpDMM over a concatenated stored-block pool; see
     :func:`repro.kernels.spdmm.spdmm_fused`.  ``y`` must already be laid out
-    with ``bn``-padded col-stripes."""
+    with ``bn``-padded col-stripes.  ``z`` (optional) is an in-place canvas
+    aliased to the output: uncovered blocks keep their ``z`` content."""
     interpret = default_interpret() if interpret is None else interpret
     _count_call()
     return _spdmm.spdmm_fused(
@@ -123,7 +147,7 @@ def spdmm_fused(a_blocks, y, a_ids, y_rows, out_rows, out_cols, first, *,
         jnp.asarray(out_cols, dtype=jnp.int32),
         jnp.asarray(first, dtype=jnp.int32),
         block_size=block_size, bn=bn, m_pad=m_pad, interpret=interpret,
-        out_dtype=out_dtype, n_entries=len(a_ids))
+        out_dtype=out_dtype, n_entries=len(a_ids), z=z)
 
 
 def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,
@@ -139,19 +163,20 @@ def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,
 
 def spmm_fused(a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first, *,
                block_size: int, m_pad: int, n_pad: int,
-               interpret: bool | None = None, out_dtype=jnp.float32):
+               interpret: bool | None = None, out_dtype=jnp.float32, z=None):
     """Fused multi-task SpMM over concatenated block pools; see
-    :func:`repro.kernels.spmm.spmm_fused`."""
+    :func:`repro.kernels.spmm.spmm_fused`.  ``z`` (optional) is an in-place
+    canvas aliased to the output: uncovered blocks keep their ``z`` content."""
     interpret = default_interpret() if interpret is None else interpret
     _count_call()
     return _spmm.spmm_fused(
         a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first,
         block_size=block_size, m_pad=m_pad, n_pad=n_pad, interpret=interpret,
-        out_dtype=out_dtype)
+        out_dtype=out_dtype, z=z)
 
 
 __all__ = [
-    "BlockCSR", "pack_blockcsr", "gemm", "gemm_batch", "spdmm", "spdmm_fused",
-    "spmm", "spmm_fused", "default_interpret", "pallas_call_count",
-    "reset_pallas_call_count",
+    "BlockCSR", "pack_blockcsr", "gemm", "gemm_batch", "gemm_batch_scatter",
+    "spdmm", "spdmm_fused", "spmm", "spmm_fused", "default_interpret",
+    "pallas_call_count", "reset_pallas_call_count",
 ]

@@ -96,6 +96,13 @@ def _spdmm_fused_kernel(aid_ref, yrow_ref, orow_ref, ocol_ref, first_ref,
     ).astype(z_ref.dtype)
 
 
+def _spdmm_fused_inplace_kernel(aid_ref, yrow_ref, orow_ref, ocol_ref,
+                                first_ref, a_ref, y_ref, zin_ref, z_ref):
+    del zin_ref
+    _spdmm_fused_kernel(aid_ref, yrow_ref, orow_ref, ocol_ref, first_ref,
+                        a_ref, y_ref, z_ref)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("block_size", "bn", "m_pad", "interpret", "out_dtype",
@@ -116,6 +123,7 @@ def spdmm_fused(
     interpret: bool = False,
     out_dtype=jnp.float32,
     n_entries: int,
+    z: jax.Array | None = None,
 ) -> jax.Array:
     """Fused multi-task SpDMM: EVERY SpDMM task of a kernel in one launch.
 
@@ -126,27 +134,50 @@ def spdmm_fused(
     ``y_rows[t]`` / col-stripe ``out_cols[t]`` and accumulate into output
     block ``(out_rows[t], out_cols[t])``.  Entries are sorted by output block
     so revisits are consecutive (VMEM residency); ``first`` zero-initializes
-    each run.  Output blocks covered by no entry are never read by the caller.
+    each run.
+
+    Without ``z``, the output is a fresh ``(m_pad, n_pad)`` buffer whose
+    blocks covered by no entry are undefined (the caller must not read
+    them).  With ``z`` — the scheduler's in-place assembly — the canvas is
+    aliased to the output, so covered blocks are written in place and every
+    other block keeps its ``z`` content (e.g. tiles already written by the
+    batched GEMM of the same kernel).
     """
     B = block_size
     k_pad, n_pad = y.shape
     assert k_pad % B == 0 and n_pad % bn == 0, (y.shape, B, bn)
 
+    in_specs = [
+        pl.BlockSpec((None, B, B),
+                     lambda t, aid, yrow, orow, ocol, first: (aid[t], 0, 0)),
+        pl.BlockSpec((B, bn),
+                     lambda t, aid, yrow, orow, ocol, first: (yrow[t], ocol[t])),
+    ]
+    operands = [a_ids, y_rows, out_rows, out_cols, first, a_blocks, y]
+    kernel = _spdmm_fused_kernel
+    out_shape = jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype)
+    aliases = {}
+    if z is not None:
+        assert z.shape == (m_pad, n_pad), (z.shape, m_pad, n_pad)
+        # canvas input, aliased to the output buffer: the kernel never
+        # reads it, so it stays in HBM (no per-step DMA)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        operands.append(z)
+        kernel = _spdmm_fused_inplace_kernel
+        out_shape = jax.ShapeDtypeStruct(z.shape, z.dtype)
+        aliases = {7: 0}            # 5 scalar-prefetch + a + y -> z
+
     return pl.pallas_call(
-        _spdmm_fused_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=5,
             grid=(n_entries,),
-            in_specs=[
-                pl.BlockSpec((None, B, B),
-                             lambda t, aid, yrow, orow, ocol, first: (aid[t], 0, 0)),
-                pl.BlockSpec((B, bn),
-                             lambda t, aid, yrow, orow, ocol, first: (yrow[t], ocol[t])),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (B, bn), lambda t, aid, yrow, orow, ocol, first: (orow[t], ocol[t])
             ),
         ),
-        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(a_ids, y_rows, out_rows, out_cols, first, a_blocks, y)
+    )(*operands)

@@ -41,30 +41,54 @@ def _spmm_kernel(aid_ref, yid_ref, orow_ref, ocol_ref, first_ref,
     ).astype(z_ref.dtype)
 
 
+def _spmm_inplace_kernel(aid_ref, yid_ref, orow_ref, ocol_ref, first_ref,
+                         a_ref, y_ref, zin_ref, z_ref):
+    del zin_ref
+    _spmm_kernel(aid_ref, yid_ref, orow_ref, ocol_ref, first_ref,
+                 a_ref, y_ref, z_ref)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("m_pad", "n_pad", "block_size", "interpret", "out_dtype",
                      "n_triples"),
 )
 def _spmm_call(a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first,
-               *, m_pad, n_pad, block_size, interpret, out_dtype, n_triples):
+               *, m_pad, n_pad, block_size, interpret, out_dtype, n_triples,
+               z=None):
     B = block_size
+    in_specs = [
+        pl.BlockSpec((None, B, B), lambda t, aid, yid, orow, ocol, first: (aid[t], 0, 0)),
+        pl.BlockSpec((None, B, B), lambda t, aid, yid, orow, ocol, first: (yid[t], 0, 0)),
+    ]
+    operands = [a_ids, y_ids, out_rows, out_cols, first, a_blocks, y_blocks]
+    kernel = _spmm_kernel
+    out_shape = jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype)
+    aliases = {}
+    if z is not None:
+        assert z.shape == (m_pad, n_pad), (z.shape, m_pad, n_pad)
+        # canvas input, aliased to the output buffer: the kernel never
+        # reads it, so it stays in HBM (no per-step DMA)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+        operands.append(z)
+        kernel = _spmm_inplace_kernel
+        out_shape = jax.ShapeDtypeStruct(z.shape, z.dtype)
+        aliases = {7: 0}            # 5 scalar-prefetch + a + y -> z
+
     return pl.pallas_call(
-        _spmm_kernel,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=5,
             grid=(n_triples,),
-            in_specs=[
-                pl.BlockSpec((None, B, B), lambda t, aid, yid, orow, ocol, first: (aid[t], 0, 0)),
-                pl.BlockSpec((None, B, B), lambda t, aid, yid, orow, ocol, first: (yid[t], 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (B, B), lambda t, aid, yid, orow, ocol, first: (orow[t], ocol[t])
             ),
         ),
-        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), out_dtype),
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(a_ids, y_ids, out_rows, out_cols, first, a_blocks, y_blocks)
+    )(*operands)
 
 
 def spmm(
@@ -112,13 +136,18 @@ def spmm_fused(
     n_pad: int,
     interpret: bool = False,
     out_dtype=jnp.float32,
+    z: jax.Array | None = None,
 ) -> jax.Array:
     """Fused multi-task SpMM: a caller-built triple list over CONCATENATED
     block pools (all packed A row-stripes / Y col-stripes of a kernel, plus
     one trailing sentinel zero block each) drives a single launch of the
     triple-walking kernel.  The caller offsets block ids into the pools and
     output coordinates into per-task regions; sorting/coverage obligations are
-    the same as :func:`repro.kernels.formats.spmm_triples`."""
+    the same as :func:`repro.kernels.formats.spmm_triples`.
+
+    ``z`` (optional) is an in-place canvas aliased to the output: triples
+    scatter into it and every block they don't cover keeps its ``z`` content
+    (the scheduler's O(1) assembly)."""
     return _spmm_call(
         jnp.asarray(a_blocks), jnp.asarray(y_blocks),
         jnp.asarray(a_ids, dtype=jnp.int32), jnp.asarray(y_ids, dtype=jnp.int32),
@@ -131,4 +160,5 @@ def spmm_fused(
         interpret=interpret,
         out_dtype=out_dtype,
         n_triples=len(a_ids),
+        z=z,
     )

@@ -68,7 +68,10 @@ def main() -> None:
         reqs.append((args.dataset, (h0 + noise * (h0 != 0)).astype(np.float32)))
 
     ops.reset_pallas_call_count()
-    outs = srv.serve(reqs)
+    try:
+        outs = srv.serve(reqs)
+    finally:
+        srv.close()
     launches = ops.pallas_call_count()
 
     stats = srv.stats.as_dict()

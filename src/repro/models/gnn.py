@@ -145,15 +145,17 @@ def run_serving(model: str, engine: DynasparseEngine, adj, feature_batches,
     density sketch revalidates each hit against the live feature batch.
     ``max_batch > 1`` additionally coalesces the stream into micro-batches
     served with one plan/execute pass each.  Returns (list of logits, list
-    of per-request engine reports — shared within a micro-batch)."""
+    of per-request engine reports — each the request's 1/k share of its
+    micro-batch report; the raw batch reports live on the serving engine's
+    ``stats.batch_reports``)."""
     from repro.serving import ServingConfig, ServingEngine
 
-    srv = ServingEngine(model, params, engine=engine,
-                        config=ServingConfig(max_batch=max_batch))
-    srv.register_graph("default", adj)
-    outs = srv.serve(("default", jnp.asarray(h)) for h in feature_batches)
-    by_id = sorted(srv.stats.requests, key=lambda r: r.request_id)
-    return outs, [r.report for r in by_id]
+    with ServingEngine(model, params, engine=engine,
+                       config=ServingConfig(max_batch=max_batch)) as srv:
+        srv.register_graph("default", adj)
+        outs = srv.serve(("default", jnp.asarray(h)) for h in feature_batches)
+        by_id = sorted(srv.stats.requests, key=lambda r: r.request_id)
+        return outs, [r.report for r in by_id]
 
 
 def run_reference(model: str, adj, h, params):

@@ -131,6 +131,10 @@ class SharedPlanCache(PlanCache):
         with self._lock:
             yield from list(super().items())
 
+    def plan_count(self):
+        with self._lock:
+            return super().plan_count()
+
     def clear(self):
         with self._lock:
             super().clear()

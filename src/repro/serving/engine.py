@@ -18,14 +18,23 @@ bit-for-bit — micro-batched results match ``run_reference`` per request.
 Request lifecycle::
 
     submit ──► per-graph queue ──► micro-batch (≤ max_batch, ≤ max_delay)
+           ──► pad to the max_batch stacked width (single-plan serving)
            ──► density sketch revalidates cached plan (replan on drift)
-           ──► one plan/execute pass over the stacked features
+           ──► one plan/execute pass on the dispatch worker thread
            ──► outputs split per request, futures resolved, stats recorded
+
+The plan/execute pass runs on a dedicated single-worker executor, NOT on
+the event loop: while a batch computes, the loop keeps accepting and
+coalescing the next burst.  Padding partial batches to ``max_batch`` keeps
+the engine's kernel geometry constant across traffic shapes, so every
+registered graph plans exactly once per distinct model kernel (the
+GraphAGILE compile-once/serve-many overlay property).
 """
 from __future__ import annotations
 
 import asyncio
 import collections
+import concurrent.futures
 import dataclasses
 import time
 from typing import Iterable, Sequence
@@ -42,10 +51,23 @@ from repro.serving.sketch import SketchConfig
 
 @dataclasses.dataclass(frozen=True)
 class ServingConfig:
-    """Micro-batching + revalidation policy of one ServingEngine."""
+    """Micro-batching + revalidation policy of one ServingEngine.
+
+    ``pad_to_max_batch`` (default on) pads a partial micro-batch's stacked
+    feature matrix to the ``max_batch`` width before dispatch (replicating
+    the batch's own feature columns — see ``_dispatch``) and slices the
+    padding columns away on split.  The engine then sees ONE stacked width
+    per graph/kernel regardless of traffic shape, so the plan cache holds
+    exactly one plan per graph and model kernel — instead of one per
+    distinct batch size — and the density sketch never sees a
+    traffic-shape-dependent operand.  Column blocks are independent through
+    the model zoo (matmuls + element-wise ops), so per-request results are
+    unchanged.
+    """
     max_batch: int = 8            # requests coalesced per dispatch
     max_delay_s: float = 0.0      # batching window after the first request
     sketch: SketchConfig = SketchConfig()
+    pad_to_max_batch: bool = True  # single-plan serving (see class docstring)
 
 
 @dataclasses.dataclass
@@ -54,17 +76,25 @@ class RequestStats:
     request_id: int
     graph_id: str
     queue_depth: int              # requests already waiting at enqueue
-    batch_size: int = 0           # size of the micro-batch it rode in
+    batch_size: int = 0           # real requests in the micro-batch (no pad)
     t_queue: float = 0.0          # seconds from enqueue to dispatch
     t_execute: float = 0.0        # micro-batch execute wall (shared)
     latency: float = 0.0          # enqueue -> result available
-    report: EngineReport | None = None   # micro-batch engine report (shared)
+    report: EngineReport | None = None   # per-request share of the batch
+                                         # report (EngineReport.attributed)
+    error: str | None = None      # set when the request's batch failed
 
 
 @dataclasses.dataclass
 class ServingStats:
     requests: list[RequestStats] = dataclasses.field(default_factory=list)
     batches: int = 0
+    # raw (unattributed) engine report of every SUCCESSFUL micro-batch, in
+    # dispatch order — the per-request `RequestStats.report` is a 1/k share.
+    # Failed batches count in `batches` but carry no engine report (their
+    # requests are visible via `RequestStats.error`), so len(batch_reports)
+    # == batches - failed batches.
+    batch_reports: list[EngineReport] = dataclasses.field(default_factory=list)
 
     def latency_percentiles(self) -> dict:
         if not self.requests:
@@ -80,8 +110,13 @@ class ServingStats:
             return 0.0
         return len(self.requests) / max(1, self.batches)
 
+    @property
+    def errors(self) -> int:
+        return sum(1 for r in self.requests if r.error is not None)
+
     def as_dict(self) -> dict:
         return {"requests": len(self.requests), "batches": self.batches,
+                "errors": self.errors,
                 "mean_batch_size": self.mean_batch_size,
                 "latency": self.latency_percentiles()}
 
@@ -162,6 +197,25 @@ class ServingEngine:
         self._queues: dict[str, collections.deque[_Request]] = {}
         self._draining: set[str] = set()
         self._next_id = 0
+        # ONE dispatch worker: micro-batches compute off the event loop (the
+        # loop keeps coalescing the next burst), serialized so the shared
+        # DynasparseEngine's report/sketch state is never touched twice at
+        # once.
+        self._dispatch_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serving-dispatch")
+
+    def close(self) -> None:
+        """Shut down the dispatch worker thread.  Call when retiring the
+        engine (or use it as a context manager); long-lived processes that
+        build engines per model/tenant would otherwise accumulate idle
+        threads.  Idempotent; in-flight batches finish first."""
+        self._dispatch_pool.shutdown(wait=True)
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # ------------------------------------------------------------- graphs
     def register_graph(self, graph_id: str, adj: SparseCOO) -> GraphKey:
@@ -196,9 +250,12 @@ class ServingEngine:
 
     async def _drain(self, graph_id: str) -> None:
         """Per-graph dispatcher: opened by the first request of a burst,
-        closes when the queue runs dry.  Single event loop ⇒ the dry-check
-        and the ``_draining`` hand-back happen without an await between
-        them, so a queue can never strand a request."""
+        closes when the queue runs dry.  The dry-check and the ``_draining``
+        hand-back happen on the loop without an await between them, so a
+        queue can never strand a request.  The compute itself is handed to
+        the dispatch worker thread — the loop stays free to accept and
+        coalesce the next burst while a batch executes."""
+        loop = asyncio.get_running_loop()
         q = self._queues[graph_id]
         try:
             while q:
@@ -210,24 +267,87 @@ class ServingEngine:
                 batch = [q.popleft()
                          for _ in range(min(len(q), self.config.max_batch))]
                 if batch:
-                    self._dispatch(graph_id, batch)
+                    try:
+                        await loop.run_in_executor(
+                            self._dispatch_pool, self._dispatch,
+                            graph_id, batch)
+                    except Exception as exc:
+                        # anything _dispatch's own handling didn't catch
+                        # (errors before its try block, a shut-down
+                        # executor, ...) must still fail the popped batch's
+                        # futures — stranding them deadlocks serve()
+                        self._fail_batch(batch, time.perf_counter(), exc)
         finally:
             self._draining.discard(graph_id)
 
+    @staticmethod
+    def _resolve(fut: asyncio.Future, *, result=None, exc=None) -> None:
+        """Resolve a future from any thread.  ``_dispatch`` runs on the
+        worker executor, where ``Future.set_result`` is not thread-safe —
+        hand the resolution to the future's own loop in that case."""
+        def _set() -> None:
+            if fut.done():
+                return
+            if exc is not None:
+                fut.set_exception(exc)
+            else:
+                fut.set_result(result)
+
+        loop = fut.get_loop()
+        try:
+            running = asyncio.get_running_loop()
+        except RuntimeError:
+            running = None
+        if running is loop:
+            _set()
+        else:
+            loop.call_soon_threadsafe(_set)
+
+    def _fail_batch(self, batch: list[_Request], t0: float,
+                    exc: Exception) -> None:
+        """Fail every request of a batch AND record it: failed traffic must
+        show up in ``requests``/``mean_batch_size`` (with ``error`` set),
+        not silently undercount the stats."""
+        t1 = time.perf_counter()
+        self.stats.batches += 1
+        for r in batch:
+            r.stats.batch_size = len(batch)
+            r.stats.t_queue = t0 - r.t_enqueue
+            r.stats.t_execute = t1 - t0
+            r.stats.latency = t1 - r.t_enqueue
+            r.stats.error = f"{type(exc).__name__}: {exc}"
+            self.stats.requests.append(r.stats)
+            self._resolve(r.future, exc=exc)
+
     def _dispatch(self, graph_id: str, batch: list[_Request]) -> None:
-        """Serve one micro-batch: stack → one engine pass → split."""
+        """Serve one micro-batch: stack → pad → one engine pass → split.
+
+        Runs on the single dispatch worker thread (``_drain`` hands it over
+        via ``run_in_executor``); futures are resolved back on their loop.
+        """
         t0 = time.perf_counter()
         adj = self._graphs[graph_id]
         k = len(batch)
         widths = [r.features.shape[1] for r in batch]
         if len(set(widths)) != 1:   # model zoo fixes the fan-in per model
-            err = ValueError(f"micro-batch mixes feature widths {widths}")
-            for r in batch:
-                if not r.future.done():
-                    r.future.set_exception(err)
+            self._fail_batch(batch, t0, ValueError(
+                f"micro-batch mixes feature widths {widths}"))
             return
         h = (batch[0].features if k == 1
              else jnp.concatenate([r.features for r in batch], axis=1))
+        kp = k
+        if self.config.pad_to_max_batch and k < self.config.max_batch:
+            # single-plan serving: pad the stacked width to max_batch so the
+            # engine sees one kernel geometry per graph across all traffic.
+            # The padding REPLICATES the batch's own feature columns
+            # (cycling through its requests) rather than zero-filling: zero
+            # columns would register as density drift against full batches
+            # and thrash the replanner, and would bias the first plan's
+            # column densities.  Each request's output block depends only on
+            # its own columns, so replication leaves results exact.
+            kp = self.config.max_batch
+            h = jnp.concatenate(
+                [h] + [batch[i % k].features for i in range(kp - k)], axis=1)
 
         saved = (self.engine.drift_threshold, self.engine.sketch_rows)
         try:
@@ -238,33 +358,38 @@ class ServingEngine:
         except Exception as exc:
             # resolve every future — an engine-side error must fail the
             # batch's requests, never strand them (serve() would deadlock)
-            for r in batch:
-                if not r.future.done():
-                    r.future.set_exception(exc)
+            self._fail_batch(batch, t0, exc)
             return
         finally:
             self.engine.drift_threshold, self.engine.sketch_rows = saved
         report = self.engine.report
         t1 = time.perf_counter()
-        out_w = logits.shape[1] // k
+        out_w = logits.shape[1] // kp
         self.stats.batches += 1
+        self.stats.batch_reports.append(report)
+        share = report.attributed(k)
         for idx, r in enumerate(batch):
             z = logits[:, idx * out_w:(idx + 1) * out_w]
             r.stats.batch_size = k
             r.stats.t_queue = t0 - r.t_enqueue
             r.stats.t_execute = t1 - t0
             r.stats.latency = t1 - r.t_enqueue
-            r.stats.report = report
+            r.stats.report = share
             self.stats.requests.append(r.stats)
-            if not r.future.done():
-                r.future.set_result(z)
+            self._resolve(r.future, result=z)
 
     # ------------------------------------------------------ sync interface
     def serve(self, requests: Iterable[tuple[str, object]],
               *, arrival_delay_s: float = 0.0) -> list[jnp.ndarray]:
         """Blocking convenience: submit ``(graph_id, features)`` pairs as
         concurrent requests, return logits in submission order.  Requests
-        submitted in one call coalesce exactly as live traffic would."""
+        submitted in one call coalesce exactly as live traffic would.
+
+        Safe to call with or without a running event loop: plain scripts go
+        through ``asyncio.run``; when the calling thread already runs a loop
+        (notebooks, async servers), the burst is driven on a dedicated
+        thread's fresh loop instead — ``asyncio.run`` would raise
+        ``RuntimeError`` there."""
         reqs = list(requests)
 
         async def _run() -> Sequence[jnp.ndarray]:
@@ -275,4 +400,10 @@ class ServingEngine:
                     await asyncio.sleep(arrival_delay_s)
             return await asyncio.gather(*tasks)
 
-        return list(asyncio.run(_run()))
+        try:
+            asyncio.get_running_loop()
+        except RuntimeError:
+            return list(asyncio.run(_run()))
+        with concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="serving-loop") as pool:
+            return list(pool.submit(asyncio.run, _run()).result())

@@ -32,12 +32,13 @@ def _rand_graph(n=80, nnz=240, seed=5):
 
 
 def _serving(model, params, *, max_batch=4, literal=True,
-             drift=0.25, cache=None):
+             drift=0.25, cache=None, pad=True):
     eng = DynasparseEngine(tile_m=16, tile_n=8, literal=literal,
                            cache=cache if cache is not None
                            else SharedPlanCache())
     cfg = ServingConfig(max_batch=max_batch,
-                        sketch=SketchConfig(threshold=drift))
+                        sketch=SketchConfig(threshold=drift),
+                        pad_to_max_batch=pad)
     return ServingEngine(model, params, engine=eng, config=cfg)
 
 
@@ -111,6 +112,167 @@ def test_multi_graph_requests_do_not_mix():
     np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(outs[2]),
                                rtol=1e-5, atol=1e-5)
     assert set(cache.graphs) == {"a", "b"}
+
+
+def test_partial_batch_padding_matches_reference():
+    """A partial micro-batch (k < max_batch) is padded to the max_batch
+    stacked width (replicated columns); the padding must be an exact
+    no-op per request."""
+    adj = _rand_graph(seed=13)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=8)
+    srv.register_graph("g", adj)
+    batches = [RNG.normal(size=(80, 12)).astype(np.float32)
+               for _ in range(3)]
+    outs = srv.serve(("g", h) for h in batches)
+    assert srv.stats.batches == 1                     # one padded batch of 3
+    assert [r.batch_size for r in srv.stats.requests] == [3, 3, 3]
+    for h, z in zip(batches, outs):
+        assert z.shape == (80, 5)                     # padding sliced away
+        ref = gnn.run_reference("GCN", adj, jnp.asarray(h), params)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_single_plan_across_batch_sizes():
+    """With pad_to_max_batch, serving k ∈ {1..max_batch} must create exactly
+    one plan entry per graph/layer kernel — not one per batch size."""
+    adj = _rand_graph(seed=14)
+    params = gnn.init_params("GCN", 12, 8, 5)   # hidden != out: 2 agg widths
+    cache = SharedPlanCache()
+    srv = _serving("GCN", params, max_batch=4, cache=cache)
+    srv.register_graph("g", adj)
+    h = RNG.normal(size=(80, 12)).astype(np.float32)
+    ref = gnn.run_reference("GCN", adj, jnp.asarray(h), params)
+    for k in (1, 2, 3, 4):
+        outs = srv.serve([("g", h)] * k)
+        for z in outs:
+            np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                       rtol=1e-3, atol=1e-3)
+    # one plan per aggregation kernel geometry (GCN: l1-agg and l2-agg have
+    # different widths), regardless of the four distinct batch sizes
+    assert cache.plan_count() == 2
+
+    # without padding, every distinct batch size plans its own width
+    cache2 = SharedPlanCache()
+    srv2 = _serving("GCN", params, max_batch=4, cache=cache2, pad=False)
+    srv2.register_graph("g", adj)
+    for k in (1, 2, 3, 4):
+        srv2.serve([("g", h)] * k)
+    assert cache2.plan_count() == 2 * 4
+
+
+def test_padded_partial_batches_do_not_thrash_replanner():
+    """Mixed full/partial traffic with stable content must trigger ZERO
+    density-drift replans: the padding replicates real feature columns, so
+    the padded operand's density matches a full batch's (zero-padding here
+    would register ~1.0 drift on every fill change and replan per batch,
+    defeating single-plan serving)."""
+    adj = _rand_graph(seed=19)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    cache = SharedPlanCache()
+    srv = _serving("GCN", params, max_batch=4, cache=cache)   # drift=0.25
+    srv.register_graph("g", adj)
+    h = RNG.normal(size=(80, 12)).astype(np.float32)
+    for k in (4, 1, 4, 1, 4):
+        srv.serve([("g", h)] * k)
+    assert cache.stats.replans == 0
+    assert cache.plan_count() == 2            # still one plan per agg kernel
+
+
+def test_serve_inside_running_loop():
+    """serve() must work when the calling thread already runs an event loop
+    (notebooks, async callers) — asyncio.run would raise RuntimeError."""
+    adj = _rand_graph(seed=15)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=2)
+    srv.register_graph("g", adj)
+    h = RNG.normal(size=(80, 12)).astype(np.float32)
+
+    async def main():
+        return srv.serve([("g", h), ("g", h)])
+
+    outs = asyncio.run(main())
+    assert len(outs) == 2
+    ref = gnn.run_reference("GCN", adj, jnp.asarray(h), params)
+    for z in outs:
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_failed_requests_recorded_in_stats():
+    """The mixed-width error path must fail the futures AND record the
+    requests (with `error` set) — failed traffic may not undercount."""
+    adj = _rand_graph(seed=16)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=2)
+    srv.register_graph("g", adj)
+    h_a = RNG.normal(size=(80, 12)).astype(np.float32)
+    h_b = RNG.normal(size=(80, 13)).astype(np.float32)
+    with pytest.raises(ValueError, match="mixes feature widths"):
+        srv.serve([("g", h_a), ("g", h_b)])
+    assert len(srv.stats.requests) == 2
+    assert srv.stats.batches == 1
+    assert srv.stats.errors == 2
+    assert all("mixes feature widths" in r.error for r in srv.stats.requests)
+    assert all(r.batch_size == 2 for r in srv.stats.requests)
+    assert srv.stats.mean_batch_size == 2.0
+    assert srv.stats.as_dict()["errors"] == 2
+
+
+def test_error_escaping_dispatch_fails_batch_instead_of_hanging():
+    """An exception raised before _dispatch's engine try-block (here: same
+    widths but mismatched row counts, so the stacking concatenate throws)
+    must fail the batch's futures — not strand them and deadlock serve()."""
+    adj = _rand_graph(seed=22)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=2)
+    srv.register_graph("g", adj)
+    h_a = RNG.normal(size=(80, 12)).astype(np.float32)
+    h_b = RNG.normal(size=(96, 12)).astype(np.float32)
+    with pytest.raises(Exception):
+        srv.serve([("g", h_a), ("g", h_b)])
+    assert len(srv.stats.requests) == 2
+    assert srv.stats.errors == 2
+    assert srv.stats.batch_reports == []      # failed batch: no report
+
+
+def test_serve_after_close_raises_instead_of_hanging():
+    """Submitting against a closed engine must surface the executor's
+    RuntimeError through the futures, not deadlock."""
+    adj = _rand_graph(seed=23)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=2)
+    srv.register_graph("g", adj)
+    srv.close()
+    with pytest.raises(RuntimeError):
+        srv.serve([("g", RNG.normal(size=(80, 12)).astype(np.float32))])
+    assert srv.stats.errors == 1
+
+
+def test_per_request_report_attribution():
+    """Each request's report is its 1/k share of the micro-batch report; the
+    raw batch report is kept on stats.batch_reports."""
+    adj = _rand_graph(seed=17)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=4)
+    srv.register_graph("g", adj)
+    srv.serve(("g", RNG.normal(size=(80, 12)).astype(np.float32))
+              for _ in range(4))
+    assert srv.stats.batches == 1
+    assert len(srv.stats.batch_reports) == 1
+    batch_rep = srv.stats.batch_reports[0]
+    assert batch_rep.hardware_time > 0.0
+    for r in srv.stats.requests:
+        assert r.report.hardware_time == pytest.approx(
+            batch_rep.hardware_time / 4)
+        assert r.report.total.flops_executed == pytest.approx(
+            batch_rep.total.flops_executed / 4)
+        # the kernel sequence itself is shared (4 GCN matmuls)
+        assert len(r.report.kernels) == len(batch_rep.kernels) == 4
+    # shares sum back to the batch total
+    assert sum(r.report.hardware_time for r in srv.stats.requests) == (
+        pytest.approx(batch_rep.hardware_time))
 
 
 def test_unregistered_graph_raises():
@@ -193,6 +355,7 @@ def test_run_serving_wrapper_per_request_and_micro_batched():
                                    rtol=1e-3, atol=1e-3)
         np.testing.assert_allclose(np.asarray(z4), np.asarray(ref),
                                    rtol=1e-3, atol=1e-3)
-    # micro-batched: one engine pass for all four requests
+    # micro-batched: one engine pass for all four requests — they share one
+    # attributed (1/k) report object; per-request runs each get their own
     assert reports4[0] is reports4[3]
     assert reports1[0] is not reports1[3]
