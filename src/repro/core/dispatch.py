@@ -1,0 +1,384 @@
+"""Compiled dispatch — plan-time lowering of a plan into an instruction stream.
+
+The paper's runtime does its sparsity analysis and kernel mapping ONCE and then
+streams work to the PL/AIE engines with near-zero per-kernel overhead (§III,
+Alg. 4); GraphAGILE goes further and compiles the whole layer sequence into a
+static instruction stream ahead of execution.  This module is that final step
+for the TPU runtime: a planned kernel is lowered into a
+:class:`CompiledDispatch` — the sorted fused-kernel descriptor arrays (SpDMM
+entry list, SpMM triple list, batched-GEMM tile coordinates), the pooled
+BlockCSR block payloads, and the padded-canvas geometry — built once with
+vectorized numpy (no per-nonzero-block Python loops) and kept device-resident
+in the :class:`~repro.core.plancache.PlanCache`.
+
+Steady-state execution then goes through :func:`execute_dispatch`: ONE jitted
+end-to-end program per (geometry, operand signature) that chains
+pad → gemm_batch_scatter → spdmm_fused → spmm_fused → slice with the
+descriptors as device arrays, so a plan-cache hit costs O(1) dict lookups on
+the host instead of O(nnz blocks) of descriptor rebuilding.
+
+Semantics vs the eager batched path (`scheduler._execute_batched`):
+
+- GEMM and SpDMM lower exactly the same operations in the same order —
+  bit-identical by construction.
+- SpMM descriptors must be Y-structure-independent to be cacheable (the eager
+  path packs the dense operand's col-stripes per call), so the compiled triple
+  list pairs every stored A block with EVERY logical Y block of the task's
+  col-stripe.  The extra pairs multiply real A blocks into exactly-zero Y
+  blocks, and ``x + (±0) == x`` bitwise for every value the accumulator can
+  take (it is initialized to +0 and can never become -0), so the result is
+  still bit-identical — but only when ``eps == 0``: an eps-thresholded pack
+  *drops* small-but-nonzero Y blocks the compiled path would keep, so the
+  engine declines to compile SpMM-bearing plans with ``eps != 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import math
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.formats import BlockCSR
+
+
+def canvas_slots(part, block: int) -> tuple[int, int] | None:
+    """Slot sizes ``(SM, SN)`` of the padded in-place canvas, or ``None``
+    when the geometry cannot use the in-place index maps (interior tile
+    boundaries not lcm(block, 8)-aligned — the per-task fallback)."""
+    align = math.lcm(block, 8)
+    tm, tn = part.tile_m, part.tile_n
+    SM = tm if tm % align == 0 else -(-tm // align) * align
+    SN = tn if tn % align == 0 else -(-tn // align) * align
+    if (part.n_row_tiles > 1 and SM != tm) or (part.n_col_tiles > 1 and SN != tn):
+        return None
+    return SM, SN
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchGeometry:
+    """Hashable static shape of a compiled dispatch — the jit cache key's
+    static half (two dispatches with equal geometry share one trace)."""
+    M: int
+    K: int
+    N: int
+    tm: int
+    tn: int
+    SM: int
+    SN: int
+    B: int
+    nrt: int
+    nct: int
+    has_gemm: bool
+    has_spdmm: bool
+    has_spmm: bool
+
+    @property
+    def m_pad(self) -> int:
+        return self.nrt * self.SM
+
+    @property
+    def n_pad(self) -> int:
+        return self.nct * self.SN
+
+    @property
+    def ncb(self) -> int:
+        return -(-self.K // self.B)
+
+
+@dataclasses.dataclass
+class CompiledDispatch:
+    """Device-resident instruction stream of one planned kernel.
+
+    ``arrays`` holds the descriptor index arrays (int32) and the pooled
+    stored-block payloads (float) — everything :func:`execute_dispatch`
+    streams to the fused kernels.  ``fingerprint`` content-addresses the
+    (structure, task assignment, geometry) this dispatch lowers, so a
+    density-drift replan that lands on the same assignment transparently
+    reuses it while a changed assignment misses to a fresh build.
+    """
+    geom: DispatchGeometry
+    arrays: dict[str, jax.Array]
+    fingerprint: str
+
+    @property
+    def needs_x(self) -> bool:
+        """True when the dense-queue gather needs the densified X operand."""
+        return self.geom.has_gemm
+
+    @property
+    def n_entries(self) -> int:
+        a = self.arrays.get("sp_a_ids")
+        return 0 if a is None else int(a.shape[0])
+
+    @property
+    def n_triples(self) -> int:
+        a = self.arrays.get("mm_a_ids")
+        return 0 if a is None else int(a.shape[0])
+
+
+def plan_digest(plan, block: int) -> str:
+    """Content digest of everything a dispatch is lowered from: operand
+    structure key, kernel geometry, and the ORDERED task assignment (entry
+    sequencing follows queue order, so order is part of the identity).
+
+    Memoized on the plan instance — the assignment is immutable once
+    planned, and hashing O(tasks) per request would reintroduce exactly the
+    per-request host work the compiled path exists to remove (a replan
+    builds a fresh ``KernelPlan``, so staleness is impossible)."""
+    memo = getattr(plan, "_dispatch_digest", None)
+    if memo is not None and memo[0] == block:
+        return memo[1]
+    h = hashlib.blake2b(digest_size=16)
+    part = plan.part
+    h.update(repr((plan.struct_key, part.M, part.K, part.N,
+                   part.tile_m, part.tile_n, block)).encode())
+    h.update(repr([(t.i, t.j, t.primitive) for t in plan.stq]).encode())
+    h.update(repr([(t.i, t.j) for t in plan.dtq]).encode())
+    digest = h.hexdigest()
+    try:
+        plan._dispatch_digest = (block, digest)
+    except Exception:   # frozen/slotted future variants: just recompute
+        pass
+    return digest
+
+
+def _stripe_pool(tasks, stripes) -> tuple[dict[int, int], jax.Array]:
+    """Concatenate the stored blocks of every row-stripe a task list touches
+    into one device pool; returns (stripe index -> pool offset, pool)."""
+    offsets: dict[int, int] = {}
+    pool = []
+    off = 0
+    for i in sorted({t.i for t in tasks}):
+        offsets[i] = off
+        pool.append(stripes[i].blocks[: stripes[i].nnzb])
+        off += stripes[i].nnzb
+    return offsets, jnp.concatenate(pool, axis=0)
+
+
+def spdmm_entry_arrays(tasks, stripes: dict[int, "BlockCSR"],
+                       offsets: dict[int, int], R: int):
+    """Vectorized fused-SpDMM entry list over all tasks of one kernel.
+
+    Returns ``(a_ids, y_rows, out_rows, out_cols, first)`` sorted by output
+    block with queue order as the tiebreak — element-for-element identical to
+    the per-block Python loop it replaces (the stripes' own ``first`` flags
+    are carried through the sort: within one output block's run the entries
+    are one stripe's one block-row in stored order, whose first stored block
+    is flagged 1).
+    """
+    out_rows, out_cols, a_ids, y_rows, firsts = [], [], [], [], []
+    for task in tasks:
+        s = stripes[task.i]
+        nb = s.nnzb
+        rid = np.asarray(s.row_ids)[:nb]
+        out_rows.append(task.i * R + rid.astype(np.int64))
+        out_cols.append(np.full(nb, task.j, dtype=np.int64))
+        a_ids.append(offsets[task.i] + np.arange(nb, dtype=np.int64))
+        y_rows.append(np.asarray(s.col_ids)[:nb].astype(np.int64))
+        firsts.append(np.asarray(s.first)[:nb].astype(np.int64))
+    out_rows = np.concatenate(out_rows)
+    out_cols = np.concatenate(out_cols)
+    a_ids = np.concatenate(a_ids)
+    y_rows = np.concatenate(y_rows)
+    firsts = np.concatenate(firsts)
+    seq = np.arange(len(out_rows))
+    order = np.lexsort((seq, out_cols, out_rows))
+    return (a_ids[order].astype(np.int32), y_rows[order].astype(np.int32),
+            out_rows[order].astype(np.int32), out_cols[order].astype(np.int32),
+            firsts[order].astype(np.int32))
+
+
+def _spmm_dense_y_triples(tasks, part, stripes, offsets, R: int, C: int,
+                          n_y_block_cols: int):
+    """Vectorized fused-SpMM triple list with a Y-structure-INDEPENDENT
+    pairing: every stored A block of a task's row-stripe is paired with every
+    logical Y block of the task's col-stripe (``y_id = ib * Ctot + cb`` into
+    the row-major block pool :func:`repro.kernels.ops.blockize` builds from
+    the dense operand at run time).  Zero Y blocks contribute exact bitwise
+    no-ops, so the result matches the structure-intersecting eager pairing —
+    see the module docstring for the eps caveat.
+    """
+    out_rows, out_cols, a_ids, y_ids = [], [], [], []
+    for task in tasks:
+        s = stripes[task.i]
+        nb = s.nnzb
+        nbj = -(-part.col_extent(task.j) // stripes[task.i].block_size)
+        rid = np.asarray(s.row_ids)[:nb].astype(np.int64)
+        cid = np.asarray(s.col_ids)[:nb].astype(np.int64)
+        kb = np.tile(np.arange(nbj, dtype=np.int64), nb)
+        out_rows.append(np.repeat(task.i * R + rid, nbj))
+        out_cols.append(task.j * C + kb)
+        a_ids.append(np.repeat(offsets[task.i] + np.arange(nb, dtype=np.int64),
+                               nbj))
+        y_ids.append(np.repeat(cid, nbj) * n_y_block_cols + task.j * C + kb)
+    out_rows = np.concatenate(out_rows)
+    out_cols = np.concatenate(out_cols)
+    a_ids = np.concatenate(a_ids)
+    y_ids = np.concatenate(y_ids)
+    order = np.lexsort((y_ids, a_ids, out_cols, out_rows))
+    out_rows, out_cols = out_rows[order], out_cols[order]
+    first = np.ones(len(out_rows), dtype=np.int32)
+    if len(first) > 1:
+        same = ((out_rows[1:] == out_rows[:-1])
+                & (out_cols[1:] == out_cols[:-1]))
+        first[1:][same] = 0
+    return (a_ids[order].astype(np.int32), y_ids[order].astype(np.int32),
+            out_rows.astype(np.int32), out_cols.astype(np.int32), first)
+
+
+def build_dispatch(part, stq, dtq, stripes: dict[int, "BlockCSR"],
+                   *, block: int, fingerprint: str = "") -> CompiledDispatch | None:
+    """Lower a planned kernel into a :class:`CompiledDispatch`.
+
+    O(nnz blocks) of VECTORIZED numpy + one device upload, paid once per
+    (structure, assignment, geometry); returns ``None`` when the canvas
+    geometry cannot take the in-place index maps (caller falls back to the
+    per-task path, exactly like the eager batched dispatch).
+    """
+    slots = canvas_slots(part, block)
+    if slots is None:
+        return None
+    SM, SN = slots
+    B = block
+    R, C = SM // B, SN // B
+    geom = DispatchGeometry(
+        M=part.M, K=part.K, N=part.N, tm=part.tile_m, tn=part.tile_n,
+        SM=SM, SN=SN, B=B, nrt=part.n_row_tiles, nct=part.n_col_tiles,
+        has_gemm=bool(dtq),
+        has_spdmm=any(t.primitive != "SpMM" for t in stq),
+        has_spmm=any(t.primitive == "SpMM" for t in stq))
+    arrays: dict[str, jax.Array] = {}
+
+    if dtq:
+        arrays["gemm_rows"] = jnp.asarray(
+            np.array([t.i for t in dtq], dtype=np.int32))
+        arrays["gemm_cols"] = jnp.asarray(
+            np.array([t.j for t in dtq], dtype=np.int32))
+
+    spdmm_tasks = [t for t in stq if t.primitive != "SpMM"]
+    spmm_tasks = [t for t in stq if t.primitive == "SpMM"]
+
+    if spdmm_tasks:
+        offsets, pool = _stripe_pool(spdmm_tasks, stripes)
+        a_ids, y_rows, out_rows, out_cols, first = spdmm_entry_arrays(
+            spdmm_tasks, stripes, offsets, R)
+        arrays["sp_pool"] = pool
+        arrays["sp_a_ids"] = jnp.asarray(a_ids)
+        arrays["sp_y_rows"] = jnp.asarray(y_rows)
+        arrays["sp_out_rows"] = jnp.asarray(out_rows)
+        arrays["sp_out_cols"] = jnp.asarray(out_cols)
+        arrays["sp_first"] = jnp.asarray(first)
+
+    if spmm_tasks:
+        offsets, pool = _stripe_pool(spmm_tasks, stripes)
+        a_ids, y_ids, out_rows, out_cols, first = _spmm_dense_y_triples(
+            spmm_tasks, part, stripes, offsets, R, C,
+            n_y_block_cols=geom.nct * C)
+        arrays["mm_pool"] = pool
+        arrays["mm_a_ids"] = jnp.asarray(a_ids)
+        arrays["mm_y_ids"] = jnp.asarray(y_ids)
+        arrays["mm_out_rows"] = jnp.asarray(out_rows)
+        arrays["mm_out_cols"] = jnp.asarray(out_cols)
+        arrays["mm_first"] = jnp.asarray(first)
+
+    return CompiledDispatch(geom=geom, arrays=arrays, fingerprint=fingerprint)
+
+
+# --------------------------------------------------------------- execution
+def apply_dispatch(geom: DispatchGeometry, arrays, x, y, *, interpret: bool):
+    """Traceable end-to-end executor body: pad → batched GEMM scatter →
+    fused SpDMM → fused SpMM → slice, on ONE aliased canvas.  ``x`` (the
+    densified operand) may be ``None`` when the plan has no dense-queue
+    tasks.  Inlines into larger jitted programs (`models.gnn.compile_model`).
+    """
+    B, SM, SN = geom.B, geom.SM, geom.SN
+    M_pad, N_pad = geom.m_pad, geom.n_pad
+    z = jnp.zeros((M_pad, N_pad), dtype=jnp.float32)
+
+    if geom.has_gemm:
+        if x is None:
+            raise ValueError("compiled dispatch: dense-queue tasks need the "
+                             "densified x operand (got x=None)")
+        rows, cols = arrays["gemm_rows"], arrays["gemm_cols"]
+        x_p = jnp.pad(x, ((0, M_pad - geom.M), (0, 0)))
+        y_p = jnp.pad(y, ((0, 0), (0, geom.nct * geom.tn - geom.N))
+                      ).reshape(geom.K, geom.nct, geom.tn)
+        if SN != geom.tn:
+            y_p = jnp.pad(y_p, ((0, 0), (0, 0), (0, SN - geom.tn)))
+        xs = x_p.reshape(geom.nrt, SM, geom.K)[rows]
+        ys = jnp.moveaxis(y_p, 1, 0)[cols]
+        z = ops.gemm_batch_scatter(xs, ys, rows, cols, z, interpret=interpret)
+
+    if geom.has_spdmm or geom.has_spmm:
+        ncb = geom.ncb
+        y_pad = jnp.pad(y, ((0, ncb * B - geom.K),
+                            (0, geom.nct * geom.tn - geom.N)))
+        y_f = jnp.pad(y_pad.reshape(ncb * B, geom.nct, geom.tn),
+                      ((0, 0), (0, 0), (0, SN - geom.tn))
+                      ).reshape(ncb * B, geom.nct * SN)
+
+    if geom.has_spdmm:
+        z = ops.spdmm_fused(
+            arrays["sp_pool"], y_f, arrays["sp_a_ids"], arrays["sp_y_rows"],
+            arrays["sp_out_rows"], arrays["sp_out_cols"], arrays["sp_first"],
+            block_size=B, bn=SN, m_pad=M_pad, interpret=interpret, z=z)
+
+    if geom.has_spmm:
+        y_blocks = ops.blockize(y_f, B)
+        z = ops.spmm_fused(
+            arrays["mm_pool"], y_blocks, arrays["mm_a_ids"],
+            arrays["mm_y_ids"], arrays["mm_out_rows"], arrays["mm_out_cols"],
+            arrays["mm_first"], block_size=B, m_pad=M_pad, n_pad=N_pad,
+            interpret=interpret, z=z)
+
+    return z[:geom.M, :geom.N]
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "interpret"))
+def _run_dispatch(geom, arrays, x, y, *, interpret):
+    return apply_dispatch(geom, arrays, x, y, interpret=interpret)
+
+
+# Trace-cache observability: jax.jit caches per (geometry, operand signature);
+# this mirror of that key set lets engines report honest trace hit counts.
+_TRACE_SEEN: set = set()
+_TRACE_LOCK = threading.Lock()
+
+
+def _signature(geom, arrays, x, y, interpret):
+    arr_sig = tuple(sorted((k, v.shape, str(v.dtype))
+                           for k, v in arrays.items()))
+    x_sig = None if x is None else (tuple(x.shape), str(x.dtype))
+    return (geom, arr_sig, x_sig, tuple(y.shape), str(y.dtype), interpret)
+
+
+def reset_trace_registry() -> None:
+    """Forget which executor signatures were seen (tests/benchmarks).  Note
+    jax's own jit cache is NOT cleared — after a reset the first call per
+    signature is counted as a build again even though jax may reuse its
+    trace; pair with ``jax.clear_caches()`` when that distinction matters."""
+    with _TRACE_LOCK:
+        _TRACE_SEEN.clear()
+
+
+def execute_dispatch(d: CompiledDispatch, x, y, *, interpret: bool,
+                     stats=None) -> jax.Array:
+    """Run one compiled kernel: a single jitted call, zero host descriptor
+    work.  ``stats`` (a ``CacheStats``) receives trace-cache accounting."""
+    y = jnp.asarray(y)
+    key = _signature(d.geom, d.arrays, x, y, interpret)
+    with _TRACE_LOCK:
+        hit = key in _TRACE_SEEN
+        _TRACE_SEEN.add(key)
+    if stats is not None:
+        if hit:
+            stats.trace_cache_hits += 1
+        else:
+            stats.trace_builds += 1
+    return _run_dispatch(d.geom, d.arrays, x, y, interpret=interpret)

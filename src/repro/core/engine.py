@@ -31,9 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import analyzer as _analyzer
+from repro.core import dispatch as _dispatch
 from repro.core import primitives as prim
 from repro.core import scheduler as _scheduler
 from repro.core import sparsity
+from repro.kernels import ops as _ops
 from repro.core.partition import choose_tile, make_tasks
 from repro.core.perfmodel import VCK5000, HardwareModel
 from repro.core.plancache import (KernelPlan, PlanCache, StructureEntry,
@@ -118,6 +120,10 @@ class DynasparseEngine:
         self.drift_threshold = drift_threshold
         self.sketch_rows = sketch_rows
         self.report = EngineReport()
+        # the plan behind the most recent matmul/plan call — lets the
+        # whole-model compiler (models.gnn.compile_model) record each
+        # kernel's plan without re-entering the cache/sketch machinery
+        self.last_plan: KernelPlan | None = None
 
     def reset(self) -> None:
         """Clear the accumulated report.  The plan cache survives — it is
@@ -158,6 +164,7 @@ class DynasparseEngine:
             cached = self.cache.get_plan(plan_key)
             if cached is not None:
                 if self.drift_threshold is None:
+                    self.last_plan = cached
                     return cached
                 # revalidate the first-call Y-density assumption with a
                 # cheap row-sampled sketch; replan on drift (stale STQ/DTQ
@@ -166,6 +173,7 @@ class DynasparseEngine:
                     y, tn, max_rows=self.sketch_rows, eps=self.eps)
                 drift = sparsity.density_drift(sk, cached.col_density)
                 if drift <= self.drift_threshold:
+                    self.last_plan = cached
                     return cached
                 # a replanned hit amortized nothing: count it as a miss so
                 # hit_rate stays an honest effectiveness signal under drift
@@ -203,6 +211,7 @@ class DynasparseEngine:
                           struct_key=struct_key)
         if plan_key is not None:
             self.cache.put_plan(plan_key, plan)
+        self.last_plan = plan
         return plan
 
     def _packed_structure(
@@ -245,10 +254,58 @@ class DynasparseEngine:
             self.cache.recharge(PlanCache._STRUCT, key)
         return entry.dense
 
+    def dispatch_for(self, plan: KernelPlan, x) -> "_dispatch.CompiledDispatch | None":
+        """The plan's :class:`CompiledDispatch` (cached; lowered on first
+        need), or ``None`` when the kernel is not compilable: non-literal /
+        non-batched engines, uncacheable (dense X) operands, canvas-
+        misaligned geometry, or eps-thresholded SpMM (the compiled pairing
+        is Y-structure-independent — see ``repro.core.dispatch``)."""
+        if not (self.literal and self.batched):
+            return None
+        if not isinstance(x, SparseCOO) or plan.struct_key is None:
+            return None
+        if _dispatch.canvas_slots(plan.part, self.block) is None:
+            return None
+        if self.eps != 0.0 and any(t.primitive == "SpMM" for t in plan.stq):
+            return None
+        _, entry = self._packed_structure(plan, x)
+        digest = _dispatch.plan_digest(plan, self.block)
+        return self.cache.dispatch(
+            (plan.struct_key, digest),
+            lambda: _dispatch.build_dispatch(
+                plan.part, plan.stq, plan.dtq, entry.stripes,
+                block=self.block, fingerprint=digest))
+
+    def compiled_operands(
+            self, plan: KernelPlan,
+            x) -> "tuple[_dispatch.CompiledDispatch, jnp.ndarray | None] | None":
+        """(dispatch, densified-x-or-None) for a plan, or ``None`` when the
+        kernel is not compilable — the whole-model compiler's accessor."""
+        d = self.dispatch_for(plan, x)
+        if d is None:
+            return None
+        xd = None
+        if d.needs_x:
+            key, entry = self._packed_structure(plan, x)
+            xd = self._ensure_dense(key, entry, x)
+        return d, xd
+
     def execute(self, plan: KernelPlan, x, y) -> jnp.ndarray:
-        """Functional result of a planned kernel (no re-analysis)."""
+        """Functional result of a planned kernel (no re-analysis).
+
+        Literal engines prefer the compiled dispatch: descriptor arrays are
+        served from the cache and the whole kernel runs as ONE jitted call —
+        zero per-request host work beyond dict lookups.  Kernels the compiler
+        declines fall back to the eager batched (or per-task) path."""
         y = jnp.asarray(y)
         if self.literal:
+            pair = self.compiled_operands(plan, x)
+            if pair is not None:
+                d, xd = pair
+                interpret = (_ops.default_interpret()
+                             if self.interpret is None else self.interpret)
+                return _dispatch.execute_dispatch(
+                    d, xd, y, interpret=interpret, stats=self.cache.stats)
             packed = None
             if isinstance(x, SparseCOO):
                 if plan.struct_key is not None:

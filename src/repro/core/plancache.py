@@ -21,6 +21,11 @@ Two cache levels, held in ONE byte-accounted LRU store:
   kernel (same adjacency, same output width — e.g. every serving request)
   skips measurement, analysis and simulation entirely.
 
+- **dispatch level** (structure key + plan digest): the plan lowered into a
+  device-resident :class:`~repro.core.dispatch.CompiledDispatch` — sorted
+  fused-kernel descriptor arrays and pooled block payloads — so steady-state
+  execution is one jitted call with zero host descriptor construction.
+
 Only kernels whose X operand is ``SparseCOO`` are cached: its structure is
 static by construction (the graph), and the O(nnz) fingerprint is far cheaper
 than the preprocessing it avoids.  Kernels with a dense X (activations) are
@@ -122,6 +127,13 @@ class CacheStats:
     replans: int = 0     # density-drift revalidations that re-planned
     evictions: int = 0   # entries dropped by LRU (bytes or count bound)
     bytes_evicted: int = 0
+    # compiled-dispatch level (the steady-state serving path): a build lowers
+    # a plan into descriptor arrays ONCE; every later request is a hit plus a
+    # jit trace-cache hit — zero host descriptor work.
+    dispatch_builds: int = 0    # plan -> CompiledDispatch lowerings
+    dispatch_hits: int = 0      # requests served from a cached dispatch
+    trace_builds: int = 0       # end-to-end executor traces (jit misses)
+    trace_cache_hits: int = 0   # executor calls that reused a trace
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -171,7 +183,7 @@ class PlanCache:
     """
 
     # entry-kind prefixes of the unified store
-    _PLAN, _DENSITY, _STRUCT = "plan", "density", "struct"
+    _PLAN, _DENSITY, _STRUCT, _DISPATCH = "plan", "density", "struct", "dispatch"
 
     def __init__(self, capacity: int = 256, max_bytes: int | None = None):
         self.capacity = capacity
@@ -273,6 +285,30 @@ class PlanCache:
         e = compute()
         self._put(self._STRUCT, key, e)
         return e
+
+    # ------------------------------------------------------ dispatch level
+    def dispatch(self, key: tuple, compute: Callable[[], object]):
+        """Get-or-compute a :class:`~repro.core.dispatch.CompiledDispatch`.
+
+        Keyed on (structure key, plan digest): a replan that lands on the
+        same task assignment reuses the lowered descriptors; a changed
+        assignment misses to a fresh build.  ``compute`` may return ``None``
+        (unlowerable geometry) — never cached, so the caller's fallback
+        decision is re-evaluated per plan, not remembered forever."""
+        d = self._get(self._DISPATCH, key)
+        if d is not None:
+            self.stats.dispatch_hits += 1
+            return d
+        d = compute()
+        if d is not None:
+            self.stats.dispatch_builds += 1
+            self._put(self._DISPATCH, key, d)
+        return d
+
+    def dispatch_count(self) -> int:
+        """Number of cached compiled-dispatch entries (bench gate:
+        ``dispatch_builds == plan_count()`` in steady state)."""
+        return sum(1 for (kind, _k) in self._entries if kind == self._DISPATCH)
 
     def clear(self) -> None:
         self._entries.clear()

@@ -18,11 +18,12 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import math
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch as _dispatch
 from repro.core.partition import KernelPartition, Task
 from repro.core.perfmodel import HardwareModel, flops, data_count
 from repro.kernels import ops
@@ -174,6 +175,14 @@ def _execute_pertask(part, stq, dtq, x, y, *, block, interpret, eps=0.0,
     y = jnp.asarray(y)
     z = np.zeros((part.M, part.N), dtype=np.float32)
     tm, tn = part.tile_m, part.tile_n
+    # device tiles are COLLECTED and pulled back in one transfer at the end:
+    # a per-task np.asarray would force a device sync per launch, serializing
+    # the queue drain on host<->device latency instead of compute
+    pending: list[tuple[slice, slice, jnp.ndarray]] = []
+    # host mirrors of the operands, materialized AT MOST ONCE if packing
+    # needs them (one transfer instead of one sync per task)
+    x_host = None
+    y_host = None
 
     if dtq and x is None:
         raise ValueError("execute_plan: dense-queue tasks need the "
@@ -183,8 +192,9 @@ def _execute_pertask(part, stq, dtq, x, y, *, block, interpret, eps=0.0,
         ys = y[:, task.j * tn:(task.j + 1) * tn]
         z_tile = ops.gemm(xs, ys, bm=min(128, -(-xs.shape[0] // 8) * 8),
                           interpret=interpret, out_dtype=jnp.float32)
-        z[task.i * tm: task.i * tm + xs.shape[0],
-          task.j * tn: task.j * tn + ys.shape[1]] = np.asarray(z_tile)
+        pending.append((slice(task.i * tm, task.i * tm + xs.shape[0]),
+                        slice(task.j * tn, task.j * tn + ys.shape[1]),
+                        z_tile))
 
     for task in stq:  # sparse engine: block-skip kernels
         if packed is not None and task.i in packed:
@@ -194,20 +204,28 @@ def _execute_pertask(part, stq, dtq, x, y, *, block, interpret, eps=0.0,
                 f"execute_plan: row-stripe {task.i} is missing from `packed` "
                 "and no dense x was supplied to pack it from")
         else:
+            if x_host is None:
+                x_host = np.asarray(x)
             x_bcsr = pack_blockcsr(
-                np.asarray(x[task.i * tm:(task.i + 1) * tm, :]), block,
-                eps=eps)
+                x_host[task.i * tm:(task.i + 1) * tm, :], block, eps=eps)
         mi = part.row_extent(task.i)
         ys = y[:, task.j * tn:(task.j + 1) * tn]
         if task.primitive == "SpMM":
-            y_bcsr = pack_blockcsr(np.asarray(ys), block, eps=eps)
+            if y_host is None:
+                y_host = np.asarray(y)
+            y_bcsr = pack_blockcsr(
+                y_host[:, task.j * tn:(task.j + 1) * tn], block, eps=eps)
             z_tile = ops.spmm(x_bcsr, y_bcsr, interpret=interpret)
         else:
             z_tile = ops.spdmm(x_bcsr, ys, bn=min(128, -(-ys.shape[1] // 8) * 8),
                                interpret=interpret)
-        z[task.i * tm: task.i * tm + mi,
-          task.j * tn: task.j * tn + ys.shape[1]] = np.asarray(z_tile)
+        pending.append((slice(task.i * tm, task.i * tm + mi),
+                        slice(task.j * tn, task.j * tn + ys.shape[1]),
+                        z_tile))
 
+    tiles = jax.device_get([t for _, _, t in pending])
+    for (rs, cs, _), tile in zip(pending, tiles):
+        z[rs, cs] = tile
     return jnp.asarray(z)
 
 
@@ -236,12 +254,11 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
     # default geometry satisfies this; constructor-supplied tile sizes that
     # don't fall back to the equivalent per-task path (packed stripes are
     # reused there, so a graph-scale x=None call still works).
-    align = math.lcm(B, 8)
-    SM = tm if tm % align == 0 else -(-tm // align) * align
-    SN = tn if tn % align == 0 else -(-tn // align) * align
-    if (nrt > 1 and SM != tm) or (nct > 1 and SN != tn):
+    slots = _dispatch.canvas_slots(part, B)
+    if slots is None:
         return _execute_pertask(part, stq, dtq, x, y, block=B,
                                 interpret=interpret, eps=eps, packed=packed)
+    SM, SN = slots
 
     R = SM // B                      # block-rows per row-stripe slot
     C = SN // B                      # block-cols per col-stripe slot
@@ -290,41 +307,21 @@ def _execute_batched(part, stq, dtq, x, y, *, block, interpret, packed=None,
         y_f = jnp.pad(y_pad.reshape(ncb * B, nct, tn),
                       ((0, 0), (0, 0), (0, SN - tn))
                       ).reshape(ncb * B, nct * SN)
-        offsets: dict[int, int] = {}
-        pool = []
-        off = 0
-        for i in sorted({t.i for t in spdmm_tasks}):
-            offsets[i] = off
-            pool.append(stripes[i].blocks[: stripes[i].nnzb])
-            off += stripes[i].nnzb
-        a_pool = jnp.concatenate(pool, axis=0)
-
-        ents = []  # (out_row, out_col, seq, a_id, y_row, first)
-        seq = 0
-        for task in spdmm_tasks:
-            s = stripes[task.i]
-            o = offsets[task.i]
-            rows = np.asarray(s.row_ids)
-            cols = np.asarray(s.col_ids)
-            fir = np.asarray(s.first)
-            for b in range(s.nnzb):
-                ents.append((task.i * R + int(rows[b]), task.j, seq,
-                             o + b, int(cols[b]), int(fir[b])))
-                seq += 1
-        ents.sort()
+        offsets, a_pool = _dispatch._stripe_pool(spdmm_tasks, stripes)
+        a_ids, y_rows, out_rows, out_cols, first = \
+            _dispatch.spdmm_entry_arrays(spdmm_tasks, stripes, offsets, R)
         z = ops.spdmm_fused(
-            a_pool, y_f,
-            np.array([e[3] for e in ents], dtype=np.int32),
-            np.array([e[4] for e in ents], dtype=np.int32),
-            np.array([e[0] for e in ents], dtype=np.int32),
-            np.array([e[1] for e in ents], dtype=np.int32),
-            np.array([e[5] for e in ents], dtype=np.int32),
+            a_pool, y_f, a_ids, y_rows, out_rows, out_cols, first,
             block_size=B, bn=SN, m_pad=M_pad, interpret=interpret, z=z)
 
     # ---------------- STQ / SpMM: one fused triple list
     if spmm_tasks:
+        # ONE host pull of Y serves every col-stripe pack of this call — a
+        # per-stripe np.asarray would sync the device once per stripe for
+        # the same matrix the SpDMM section just laid out
+        y_np = np.asarray(y)
         ystripes = {
-            j: pack_blockcsr(np.asarray(y[:, j * tn:(j + 1) * tn]), B, eps=eps)
+            j: pack_blockcsr(y_np[:, j * tn:(j + 1) * tn], B, eps=eps)
             for j in sorted({t.j for t in spmm_tasks})}
         a_off: dict[int, int] = {}
         y_off: dict[int, int] = {}

@@ -150,6 +150,20 @@ def spdmm_fused(a_blocks, y, a_ids, y_rows, out_rows, out_cols, first, *,
         out_dtype=out_dtype, n_entries=len(a_ids), z=z)
 
 
+def blockize(y, block: int):
+    """Dense ``(R*B, C*B)`` matrix → ``(R*C, B, B)`` block pool in row-major
+    block order (``pool[r*C + c] == y[r*B:(r+1)*B, c*B:(c+1)*B]``).
+
+    The compiled-dispatch SpMM path derives its Y operand pool from the dense
+    matrix at run time (a reshape/transpose, no host packing), addressed by
+    plan-time ``y_id = row_block * C + col_block`` descriptors."""
+    m, n = y.shape
+    assert m % block == 0 and n % block == 0, (y.shape, block)
+    r, c = m // block, n // block
+    return y.reshape(r, block, c, block).transpose(0, 2, 1, 3).reshape(
+        r * c, block, block)
+
+
 def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,
          out_dtype=jnp.float32):
     """Block-sparse ``a @ y`` with both operands sparse."""
@@ -176,7 +190,8 @@ def spmm_fused(a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first, *,
 
 
 __all__ = [
-    "BlockCSR", "pack_blockcsr", "gemm", "gemm_batch", "gemm_batch_scatter",
+    "BlockCSR", "pack_blockcsr", "blockize", "gemm", "gemm_batch",
+    "gemm_batch_scatter",
     "spdmm", "spdmm_fused", "spmm", "spmm_fused", "default_interpret",
     "pallas_call_count", "reset_pallas_call_count",
 ]

@@ -82,6 +82,7 @@ def main() -> None:
         "cache_bytes": cache.bytes_used,
         "plan_hit_rate": cache.stats.hit_rate,
         "pallas_launches_per_request": launches / max(1, len(outs)),
+        "dispatch": srv.dispatch_stats(),
     })
     print("[gnn_serve] " + json.dumps(stats))
 

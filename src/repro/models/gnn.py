@@ -14,14 +14,18 @@ aggregation cost (visible in Table VI).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import DynasparseEngine
+from repro.core import dispatch as _dispatch
+from repro.core import sparsity
+from repro.core.engine import DynasparseEngine, EngineReport
 from repro.core.primitives import SparseCOO
+from repro.kernels import ops
 
 MM = Callable[..., jax.Array]   # mm(x, y, name=...) -> z
 
@@ -120,6 +124,153 @@ def reference_mm(x, y, name="kernel"):
     if isinstance(y, SparseCOO):
         y = jnp.asarray(y.todense())
     return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+@dataclasses.dataclass
+class CompiledModel:
+    """A whole model's kernel sequence fused into ONE jitted program.
+
+    The GraphAGILE property at model scope: after one eager warmup pass has
+    planned/packed/lowered every kernel, a steady-state micro-batch is a
+    single compiled call — no Python per-kernel dispatch, no descriptor
+    work, no per-kernel launches from the host's point of view.
+
+    ``report`` is the warmup pass's :class:`EngineReport`; the schedule
+    reports are plan-time simulations, so every later call on the same
+    geometry would reproduce them verbatim — :meth:`fresh_report` hands the
+    serving layer an identical (shallow) copy per batch.  Each call also
+    credits ``plan_hits`` for its sparse kernels on ``stats``: a compiled
+    call IS the reuse of those cached plans, and the hit-rate signal should
+    keep reflecting that amortization.
+    """
+    model: str
+    run: Callable                 # jitted replay: run(payload, h) -> logits
+    payload: list                 # per-kernel descriptor/pool pytrees
+    report: EngineReport          # warmup report template (plan simulations)
+    input_sketch: np.ndarray      # col-density sketch of the warmup features
+    sketch_tile: int
+    n_kernels: int
+    n_sparse: int
+    stats: object | None = None   # CacheStats receiving call accounting
+    calls: int = 0
+    traces: int = 0               # distinct input signatures (jit retraces)
+    _seen: set = dataclasses.field(default_factory=set)
+
+    def drifted(self, h, threshold: float, *, max_rows: int = 256,
+                eps: float = 0.0) -> bool:
+        """Has the input's column density drifted past ``threshold`` from
+        the features this program was compiled against?  The compiled path
+        cannot sketch intermediate activations (they only exist inside the
+        jitted program), so the input sketch is the invalidation signal —
+        on drift the caller re-runs the eager path, whose per-kernel
+        sketches replan stale assignments, and recompiles."""
+        sk = sparsity.sketch_col_density(jnp.asarray(h), self.sketch_tile,
+                                         max_rows=max_rows, eps=eps)
+        return sparsity.density_drift(sk, self.input_sketch) > threshold
+
+    def fresh_report(self) -> EngineReport:
+        return EngineReport(kernels=list(self.report.kernels),
+                            meta=list(self.report.meta))
+
+    def __call__(self, h) -> jax.Array:
+        h = jnp.asarray(h)
+        sig = (tuple(h.shape), str(h.dtype))
+        new = sig not in self._seen
+        self._seen.add(sig)
+        self.calls += 1
+        self.traces += int(new)
+        if self.stats is not None:
+            if new:
+                self.stats.trace_builds += 1
+            else:
+                self.stats.trace_cache_hits += 1
+            self.stats.plan_hits += self.n_sparse
+        return self.run(self.payload, h)
+
+
+def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
+                  *, transport=None):
+    """Fuse all layer kernels of (model, graph, feature shape) into a single
+    jitted program; returns ``(warmup logits, CompiledModel | None)``.
+
+    The warmup is ONE ordinary eager pass through ``engine.matmul`` — it
+    plans, packs and lowers every adjacency kernel into the plan cache (all
+    amortized state a later eager call would also use), while this function
+    records each kernel's :class:`~repro.core.dispatch.CompiledDispatch`.
+    The replay then re-traces the model with every adjacency kernel inlined
+    as its compiled-dispatch body and every activation-side kernel as one
+    dense Pallas GEMM, the whole sequence under ONE ``jax.jit``.
+
+    ``None`` (second element) when any adjacency kernel has no compiled
+    dispatch — non-literal/non-batched engines, canvas-misaligned geometry,
+    eps-thresholded SpMM — in which case the caller keeps the eager path.
+
+    Note the activation-side trade: the eager engine may route sparse
+    activations to the block-skip kernels, which the compiled program cannot
+    (their block structure is data-dependent, the program is static).  The
+    results agree to float tolerance; the skip is traded for zero host work.
+
+    ``transport`` optionally wraps the abstract ``mm`` with a representation
+    transform (the serving layer's column-stack/row-unstack transport) and
+    must be trace-pure.
+    """
+    transport = transport if transport is not None else (lambda mm: mm)
+    h = jnp.asarray(h)
+    records: list[tuple[str, object]] = []   # ("sparse", geom) | ("gemm", _)
+    payload: list = []
+    compilable = [True]
+    n0 = len(engine.report.kernels)
+
+    def recording(x, y, name="kernel"):
+        z, _ = engine.matmul(x, y, name=name)
+        if isinstance(x, SparseCOO):
+            pair = engine.compiled_operands(engine.last_plan, x)
+            if pair is None:
+                compilable[0] = False
+                records.append(("gemm", None))
+                payload.append(None)
+            else:
+                d, xd = pair
+                records.append(("sparse", d.geom))
+                payload.append({"arrays": dict(d.arrays), "xd": xd})
+        else:
+            records.append(("gemm", None))
+            payload.append(None)
+        return z
+
+    logits = APPLY[model](transport(recording), adj, h, params)
+    if not compilable[0]:
+        return logits, None
+
+    interpret = (ops.default_interpret() if engine.interpret is None
+                 else engine.interpret)
+
+    def replay(payload_, hh):
+        ctr = itertools.count()
+
+        def mm(x, y, name="kernel"):
+            i = next(ctr)
+            kind, geom = records[i]
+            if kind == "gemm":
+                return ops.gemm(jnp.asarray(x), jnp.asarray(y),
+                                interpret=interpret, out_dtype=jnp.float32)
+            p = payload_[i]
+            return _dispatch.apply_dispatch(geom, p["arrays"], p["xd"], y,
+                                            interpret=interpret)
+
+        return APPLY[model](transport(mm), adj, hh, params)
+
+    tn = engine.tile_n or min(128, int(h.shape[1]))
+    sketch = sparsity.sketch_col_density(h, tn, max_rows=engine.sketch_rows,
+                                         eps=engine.eps)
+    report = EngineReport(kernels=list(engine.report.kernels[n0:]),
+                          meta=list(engine.report.meta[n0:]))
+    return logits, CompiledModel(
+        model=model, run=jax.jit(replay), payload=payload, report=report,
+        input_sketch=np.asarray(sketch), sketch_tile=tn,
+        n_kernels=len(records),
+        n_sparse=sum(1 for k, _ in records if k == "sparse"),
+        stats=engine.cache.stats)
 
 
 def run_inference(model: str, engine: DynasparseEngine, adj, h, params):

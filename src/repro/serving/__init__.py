@@ -9,11 +9,11 @@ for the process-wide cache + persistence.
 from repro.serving.cache import (GraphKey, SharedPlanCache, get_shared_cache,
                                  set_shared_cache)
 from repro.serving.engine import (RequestStats, ServingConfig, ServingEngine,
-                                  ServingStats, batched_mm)
+                                  ServingStats, batched_mm, stacked_transport)
 from repro.serving.sketch import SketchConfig
 
 __all__ = [
     "GraphKey", "SharedPlanCache", "get_shared_cache", "set_shared_cache",
     "RequestStats", "ServingConfig", "ServingEngine", "ServingStats",
-    "batched_mm", "SketchConfig",
+    "batched_mm", "stacked_transport", "SketchConfig",
 ]

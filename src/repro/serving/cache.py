@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import CompiledDispatch
 from repro.core.plancache import PlanCache, StructureEntry
 from repro.core.primitives import SparseCOO
 from repro.core.plancache import coo_fingerprint
@@ -80,6 +81,13 @@ def _struct_to_device(entry: StructureEntry) -> StructureEntry:
     return StructureEntry(stripes=stripes, dense=dense)
 
 
+def _dispatch_to_device(d: CompiledDispatch) -> CompiledDispatch:
+    """Re-upload a restored compiled dispatch's descriptor arrays and block
+    pools — a restarted serving process replays zero descriptor lowering."""
+    return dataclasses.replace(
+        d, arrays={k: jnp.asarray(v) for k, v in d.arrays.items()})
+
+
 class SharedPlanCache(PlanCache):
     """Thread-safe multi-graph :class:`PlanCache` with save/load.
 
@@ -126,6 +134,14 @@ class SharedPlanCache(PlanCache):
     def structure(self, key, compute):
         with self._lock:
             return super().structure(key, compute)
+
+    def dispatch(self, key, compute):
+        with self._lock:
+            return super().dispatch(key, compute)
+
+    def dispatch_count(self):
+        with self._lock:
+            return super().dispatch_count()
 
     def items(self):
         with self._lock:
@@ -204,6 +220,8 @@ class SharedPlanCache(PlanCache):
             for (kind, key), value in payload["entries"]:
                 if kind == self._STRUCT:
                     value = _struct_to_device(value)
+                elif kind == self._DISPATCH:
+                    value = _dispatch_to_device(value)
                 super()._put(kind, key, value)
             for (kind, key), value in live:
                 super()._put(kind, key, value)

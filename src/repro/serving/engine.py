@@ -68,6 +68,19 @@ class ServingConfig:
     max_delay_s: float = 0.0      # batching window after the first request
     sketch: SketchConfig = SketchConfig()
     pad_to_max_batch: bool = True  # single-plan serving (see class docstring)
+    # Whole-model compiled dispatch (default on): the first micro-batch of a
+    # (graph, stacked shape) runs eagerly — planning, packing and lowering
+    # every kernel — and doubles as the warmup pass of
+    # ``models.gnn.compile_model``; every later batch is ONE jitted call with
+    # zero host descriptor work.  The input-density sketch invalidates the
+    # compiled program on drift (the eager re-run replans, then recompiles).
+    # Engines the compiler declines (non-literal, misaligned geometry,
+    # eps-thresholded SpMM) transparently stay eager.
+    compile_models: bool = True
+    # Bound on retained compiled programs (insertion-order eviction): the
+    # registry pins descriptor/operand arrays outside the byte-accounted
+    # plan cache, so a many-graph engine must not grow it without limit.
+    max_compiled: int = 32
 
 
 @dataclasses.dataclass
@@ -89,6 +102,8 @@ class RequestStats:
 class ServingStats:
     requests: list[RequestStats] = dataclasses.field(default_factory=list)
     batches: int = 0
+    compiled_batches: int = 0     # batches served by a CompiledModel call
+    compile_invalidations: int = 0  # compiled programs dropped on input drift
     # raw (unattributed) engine report of every SUCCESSFUL micro-batch, in
     # dispatch order — the per-request `RequestStats.report` is a 1/k share.
     # Failed batches count in `batches` but carry no engine report (their
@@ -116,6 +131,8 @@ class ServingStats:
 
     def as_dict(self) -> dict:
         return {"requests": len(self.requests), "batches": self.batches,
+                "compiled_batches": self.compiled_batches,
+                "compile_invalidations": self.compile_invalidations,
                 "errors": self.errors,
                 "mean_batch_size": self.mean_batch_size,
                 "latency": self.latency_percentiles()}
@@ -129,26 +146,26 @@ class _Request:
     t_enqueue: float
 
 
-def batched_mm(engine: DynasparseEngine) -> gnn.MM:
-    """The stacked-representation matmul the model zoo is applied against.
+def stacked_transport(mm: gnn.MM) -> gnn.MM:
+    """Wrap an abstract matmul with the stacked-representation transport.
 
     Sparse x (aggregation): the stacked ``(N, k·d)`` operand feeds one
-    engine matmul — the plan for this graph/width is shared by every
-    micro-batch of the same size.  Dense x (transformation): the stacked
-    operand is unstacked to row form ``(k·N, d_in)`` around one matmul, so
-    weights are never block-diagonalized.  ``k`` is recovered from the
-    width ratio, so the same ``mm`` serves every layer of every model.
+    kernel — aggregation distributes over the column blocks directly.
+    Dense x (transformation): the stacked operand is unstacked to row form
+    ``(k·N, d_in)`` around one kernel, so weights are never
+    block-diagonalized.  ``k`` is recovered from the width ratio, so the
+    same ``mm`` serves every layer of every model.  Trace-pure (shapes
+    only), so the whole-model compiler reuses it around the replayed
+    kernels.
     """
-    def mm(x, y, name: str = "kernel"):
+    def wrapped(x, y, name: str = "kernel"):
         if isinstance(x, SparseCOO):
-            z, _ = engine.matmul(x, y, name=name)
-            return z
+            return mm(x, y, name=name)
         x = jnp.asarray(x)
         y = jnp.asarray(y)
         d_in = y.shape[0]
         if x.shape[1] == d_in:          # unstacked (k == 1) — plain kernel
-            z, _ = engine.matmul(x, y, name=name)
-            return z
+            return mm(x, y, name=name)
         if x.shape[1] % d_in:
             raise ValueError(
                 f"stacked width {x.shape[1]} is not a multiple of the "
@@ -156,10 +173,16 @@ def batched_mm(engine: DynasparseEngine) -> gnn.MM:
         k = x.shape[1] // d_in
         n = x.shape[0]
         xr = x.reshape(n, k, d_in).transpose(1, 0, 2).reshape(k * n, d_in)
-        z, _ = engine.matmul(xr, y, name=name)
+        z = mm(xr, y, name=name)
         d_out = y.shape[1]
         return z.reshape(k, n, d_out).transpose(1, 0, 2).reshape(n, k * d_out)
-    return mm
+    return wrapped
+
+
+def batched_mm(engine: DynasparseEngine) -> gnn.MM:
+    """The stacked-representation matmul the model zoo is applied against
+    (the eager path: every kernel goes through ``engine.matmul``)."""
+    return stacked_transport(gnn.engine_mm(engine))
 
 
 class ServingEngine:
@@ -196,6 +219,9 @@ class ServingEngine:
         self._graphs: dict[str, SparseCOO] = {}
         self._queues: dict[str, collections.deque[_Request]] = {}
         self._draining: set[str] = set()
+        # compiled whole-model programs, one per (graph, stacked shape,
+        # dtype) — with pad_to_max_batch that is ONE program per graph
+        self._compiled: dict[tuple, gnn.CompiledModel] = {}
         self._next_id = 0
         # ONE dispatch worker: micro-batches compute off the event loop (the
         # loop keeps coalescing the next burst), serialized so the shared
@@ -203,6 +229,22 @@ class ServingEngine:
         # once.
         self._dispatch_pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="serving-dispatch")
+
+    def dispatch_stats(self) -> dict:
+        """Compiled-path observability: the plan/dispatch/trace counters of
+        the underlying cache plus this engine's compiled-program registry
+        (the dispatch benchmark's acceptance surface)."""
+        s = self.engine.cache.stats
+        return {
+            "plans": self.engine.cache.plan_count(),
+            "dispatch_builds": s.dispatch_builds,
+            "dispatch_hits": s.dispatch_hits,
+            "trace_builds": s.trace_builds,
+            "trace_cache_hits": s.trace_cache_hits,
+            "replans": s.replans,
+            "compiled_models": len(self._compiled),
+            "compiled_batches": self.stats.compiled_batches,
+        }
 
     def close(self) -> None:
         """Shut down the dispatch worker thread.  Call when retiring the
@@ -222,6 +264,13 @@ class ServingEngine:
         """Make ``graph_id`` servable.  Returns the content key; when the
         engine's cache is a SharedPlanCache the key is also recorded in its
         registry (persistence manifest / observability)."""
+        if self._graphs.get(graph_id) is not adj:
+            # a re-registered id may carry a DIFFERENT graph: compiled
+            # whole-model programs bake the old adjacency's descriptors in,
+            # and the input-density drift check cannot see an adjacency
+            # swap — drop them so the next batch recompiles against adj
+            for k in [k for k in self._compiled if k[0] == graph_id]:
+                del self._compiled[k]
         self._graphs[graph_id] = adj
         self._queues.setdefault(graph_id, collections.deque())
         if isinstance(self.engine.cache, SharedPlanCache):
@@ -350,11 +399,39 @@ class ServingEngine:
                 [h] + [batch[i % k].features for i in range(kp - k)], axis=1)
 
         saved = (self.engine.drift_threshold, self.engine.sketch_rows)
+        compiled = False
         try:
             self.config.sketch.apply(self.engine)
-            self.engine.reset()
-            logits = gnn.APPLY[self.model](batched_mm(self.engine), adj, h,
-                                           self.params)
+            cm_key = (graph_id, tuple(h.shape), str(h.dtype))
+            cm = (self._compiled.get(cm_key)
+                  if self.config.compile_models else None)
+            thr = self.config.sketch.threshold
+            if cm is not None and thr is not None and cm.drifted(
+                    h, thr, max_rows=self.config.sketch.max_rows,
+                    eps=self.engine.eps):
+                # stale compiled program: the eager re-run below replans
+                # drifted kernels, then a fresh program is compiled
+                self._compiled.pop(cm_key, None)
+                self.stats.compile_invalidations += 1
+                cm = None
+            if cm is not None:
+                logits = cm(h)
+                report = cm.fresh_report()
+                compiled = True
+            else:
+                self.engine.reset()
+                if self.config.compile_models:
+                    logits, built = gnn.compile_model(
+                        self.model, self.engine, adj, h, self.params,
+                        transport=stacked_transport)
+                    if built is not None:
+                        self._compiled[cm_key] = built
+                        while len(self._compiled) > self.config.max_compiled:
+                            self._compiled.pop(next(iter(self._compiled)))
+                else:
+                    logits = gnn.APPLY[self.model](batched_mm(self.engine),
+                                                   adj, h, self.params)
+                report = self.engine.report
         except Exception as exc:
             # resolve every future — an engine-side error must fail the
             # batch's requests, never strand them (serve() would deadlock)
@@ -362,10 +439,10 @@ class ServingEngine:
             return
         finally:
             self.engine.drift_threshold, self.engine.sketch_rows = saved
-        report = self.engine.report
         t1 = time.perf_counter()
         out_w = logits.shape[1] // kp
         self.stats.batches += 1
+        self.stats.compiled_batches += int(compiled)
         self.stats.batch_reports.append(report)
         share = report.attributed(k)
         for idx, r in enumerate(batch):

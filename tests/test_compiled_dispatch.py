@@ -1,0 +1,229 @@
+"""Compiled dispatch (tentpole of ISSUE 4).
+
+A planned kernel is lowered ONCE into a device-resident CompiledDispatch
+(sorted descriptor arrays + pooled blocks, vectorized numpy build) and every
+later execute is a single jitted call.  These tests pin the load-bearing
+properties: bit-identity against BOTH existing paths (eager batched and
+per-task) across ragged/mixed-primitive geometries, zero host descriptor
+work in steady state, honest cache accounting/eviction, the decline gates
+(eps-thresholded SpMM, misaligned canvas), and the whole-model compiler.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import DynasparseEngine, SparseCOO
+from repro.core import dispatch as dispatch_mod
+from repro.core.plancache import PlanCache
+from repro.core.scheduler import execute_plan
+from repro.models import gnn
+
+RNG = np.random.default_rng(31)
+
+
+def _coo_of(xd: np.ndarray) -> SparseCOO:
+    r, c = np.nonzero(xd)
+    return SparseCOO(xd.shape, jnp.asarray(r.astype(np.int32)),
+                     jnp.asarray(c.astype(np.int32)),
+                     jnp.asarray(xd[r, c]), tag="adjacency")
+
+
+def _mixed_ragged_operands(seed=1, M=90, K=64, N=44):
+    """Sparsity bands that land tasks in all three primitives, with ragged
+    row and column edge tiles under (tile_m=32, tile_n=24)."""
+    rng = np.random.default_rng(seed)
+    xd = rng.normal(size=(M, K)).astype(np.float32)
+    xd[:32] *= (rng.uniform(size=(32, K)) < 0.01)
+    xd[32:64] *= (rng.uniform(size=(32, K)) < 0.3)
+    yd = rng.normal(size=(K, N)).astype(np.float32)
+    yd[:, :24] *= (rng.uniform(size=(K, 24)) < 0.05)
+    return xd, yd
+
+
+def _all_paths(eng, xd, yd):
+    """(compiled, eager batched, per-task) results of one planned kernel."""
+    x = _coo_of(xd)
+    plan = eng.plan(x, jnp.asarray(yd))
+    z_c = eng.execute(plan, x, jnp.asarray(yd))
+    z_b = execute_plan(plan.part, plan.stq, plan.dtq, xd, yd, batched=True)
+    z_p = execute_plan(plan.part, plan.stq, plan.dtq, xd, yd, batched=False)
+    return plan, np.asarray(z_c), np.asarray(z_b), np.asarray(z_p)
+
+
+def test_compiled_mixed_primitives_ragged_bitwise():
+    xd, yd = _mixed_ragged_operands()
+    eng = DynasparseEngine(tile_m=32, tile_n=24, literal=True)
+    plan, z_c, z_b, z_p = _all_paths(eng, xd, yd)
+    prims = {t.primitive for t in plan.stq} | {t.primitive for t in plan.dtq}
+    assert prims == {"SpDMM", "SpMM", "GEMM"}, prims
+    assert eng.cache.stats.dispatch_builds == 1   # compiled path was taken
+    np.testing.assert_array_equal(z_c, z_b)
+    np.testing.assert_array_equal(z_c, z_p)
+    np.testing.assert_allclose(z_c, xd @ yd, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tm,tn,mkn,seed", [
+    (16, 8, (40, 32, 20), 7),     # ragged both axes
+    (32, 8, (64, 48, 8), 3),      # single col stripe
+    (8, 16, (24, 16, 33), 11),    # ragged col tail
+    (128, 128, (20, 16, 5), 5),   # single padded slot
+])
+def test_compiled_bit_identity_across_geometries(tm, tn, mkn, seed):
+    M, K, N = mkn
+    rng = np.random.default_rng(seed)
+    xd = (rng.normal(size=(M, K)) *
+          (rng.uniform(size=(M, K)) < 0.3)).astype(np.float32)
+    yd = (rng.normal(size=(K, N)) *
+          (rng.uniform(size=(K, N)) < 0.5)).astype(np.float32)
+    eng = DynasparseEngine(tile_m=tm, tile_n=tn, literal=True)
+    _, z_c, z_b, z_p = _all_paths(eng, xd, yd)
+    np.testing.assert_array_equal(z_c, z_b)
+    np.testing.assert_array_equal(z_c, z_p)
+    np.testing.assert_allclose(z_c, xd @ yd, rtol=1e-4, atol=1e-4)
+
+
+def test_steady_state_builds_nothing_and_hits_trace():
+    """Second execute of the same plan: descriptor build count frozen, the
+    dispatch is a cache hit, the jit trace is a hit, result identical."""
+    xd, yd = _mixed_ragged_operands(seed=2)
+    x = _coo_of(xd)
+    eng = DynasparseEngine(tile_m=32, tile_n=24, literal=True)
+    z1, _ = eng.matmul(x, jnp.asarray(yd))
+    s = eng.cache.stats
+    builds = s.dispatch_builds
+    assert builds == 1
+
+    # any attempt to lower descriptors again (or run per-block Python
+    # loops) in steady state is the regression this PR removes
+    def _boom(*a, **k):
+        raise AssertionError("descriptor build ran on a plan-cache hit")
+    orig = dispatch_mod.build_dispatch
+    dispatch_mod.build_dispatch = _boom
+    try:
+        z2, _ = eng.matmul(x, jnp.asarray(yd))
+    finally:
+        dispatch_mod.build_dispatch = orig
+    assert s.dispatch_builds == builds
+    assert s.dispatch_hits >= 1
+    assert s.trace_cache_hits >= 1
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
+def test_eps_spmm_declines_compiled_but_matches():
+    """eps != 0 with SpMM tasks must decline compilation (the compiled
+    pairing is Y-structure-independent and would keep eps-skipped blocks)
+    and fall back to the eager path — still correct."""
+    xd, yd = _mixed_ragged_operands(seed=4)
+    x = _coo_of(xd)
+    eng = DynasparseEngine(tile_m=32, tile_n=24, literal=True, eps=1e-7)
+    plan = eng.plan(x, jnp.asarray(yd))
+    if not any(t.primitive == "SpMM" for t in plan.stq):
+        pytest.skip("plan routed no SpMM tasks")
+    assert eng.dispatch_for(plan, x) is None
+    z, _ = eng.matmul(x, jnp.asarray(yd))
+    assert eng.cache.stats.dispatch_builds == 0
+    np.testing.assert_allclose(np.asarray(z), xd @ yd, rtol=1e-4, atol=1e-4)
+
+
+def test_misaligned_geometry_declines_compiled_but_matches():
+    """tile_m=12 interior boundaries can't take the in-place index maps:
+    no dispatch is built and execution falls through the existing paths."""
+    rng = np.random.default_rng(3)
+    xd = (rng.normal(size=(36, 24)) *
+          (rng.uniform(size=(36, 24)) < 0.3)).astype(np.float32)
+    yd = rng.normal(size=(24, 16)).astype(np.float32)
+    x = _coo_of(xd)
+    eng = DynasparseEngine(tile_m=12, tile_n=8, literal=True)
+    plan = eng.plan(x, jnp.asarray(yd))
+    assert eng.dispatch_for(plan, x) is None
+    z, _ = eng.matmul(x, jnp.asarray(yd))
+    assert eng.cache.stats.dispatch_builds == 0
+    np.testing.assert_allclose(np.asarray(z), xd @ yd, rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_entries_byte_accounted_and_evictable():
+    """A cached dispatch must charge its descriptor/pool bytes and obey the
+    LRU byte budget like every other entry kind."""
+    xd, yd = _mixed_ragged_operands(seed=6)
+    x = _coo_of(xd)
+    eng = DynasparseEngine(tile_m=32, tile_n=24, literal=True)
+    before = eng.cache.bytes_used
+    eng.matmul(x, jnp.asarray(yd))
+    assert eng.cache.dispatch_count() == 1
+    assert eng.cache.bytes_used > before
+
+    small = PlanCache(max_bytes=1)      # everything but the newest evicts
+    eng2 = DynasparseEngine(tile_m=32, tile_n=24, literal=True, cache=small)
+    eng2.matmul(x, jnp.asarray(yd))
+    assert small.stats.evictions > 0
+    assert small.bytes_used <= max(
+        nb for _, nb in small._entries.values()) or len(small) == 1
+
+
+def test_replan_same_assignment_reuses_dispatch():
+    """The dispatch key is content-addressed on (structure, assignment):
+    a drift replan that lands on the same task assignment must HIT."""
+    xd, yd = _mixed_ragged_operands(seed=8)
+    x = _coo_of(xd)
+    eng = DynasparseEngine(tile_m=32, tile_n=24, literal=True,
+                           drift_threshold=1e-12)  # replan on any wiggle
+    eng.matmul(x, jnp.asarray(yd))
+    assert eng.cache.stats.dispatch_builds == 1
+    # zero ONE element of a dense stripe: a sub-eps density wiggle that
+    # trips the replan threshold but cannot flip any task's assignment
+    yd2 = yd.copy()
+    r, c = np.argwhere(yd2[:, 24:] != 0)[0]
+    yd2[r, 24 + c] = 0.0
+    eng.matmul(x, jnp.asarray(yd2))
+    assert eng.cache.stats.replans >= 1
+    assert eng.cache.stats.dispatch_builds == 1     # reused, not rebuilt
+    assert eng.cache.stats.dispatch_hits >= 1
+
+
+# --------------------------------------------------------- compile_model
+@pytest.mark.parametrize("model", gnn.MODELS)
+def test_compile_model_single_program_matches_eager(model):
+    rng = np.random.default_rng(17)
+    n, nnz = 80, 240
+    flat = np.sort(rng.choice(n * n, size=nnz, replace=False))
+    adj = SparseCOO((n, n), jnp.asarray((flat // n).astype(np.int32)),
+                    jnp.asarray((flat % n).astype(np.int32)),
+                    jnp.asarray(np.abs(rng.normal(size=nnz)
+                                       ).astype(np.float32)),
+                    tag="adjacency")
+    h = rng.normal(size=(n, 12)).astype(np.float32)
+    params = gnn.init_params(model, 12, 8, 5)
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True)
+    eng.reset()
+    warm, cm = gnn.compile_model(model, eng, adj, jnp.asarray(h), params)
+    assert cm is not None
+    assert cm.n_sparse >= 1
+    assert len(cm.report.kernels) == cm.n_kernels
+    ref = gnn.run_reference(model, adj, jnp.asarray(h), params)
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+    z1 = cm(jnp.asarray(h))
+    z2 = cm(jnp.asarray(h))
+    assert cm.calls == 2 and cm.traces == 1        # one trace, then hits
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_compile_model_declines_on_nonliteral_engine():
+    rng = np.random.default_rng(19)
+    n, nnz = 40, 80
+    flat = np.sort(rng.choice(n * n, size=nnz, replace=False))
+    adj = SparseCOO((n, n), jnp.asarray((flat // n).astype(np.int32)),
+                    jnp.asarray((flat % n).astype(np.int32)),
+                    jnp.asarray(np.abs(rng.normal(size=nnz)
+                                       ).astype(np.float32)),
+                    tag="adjacency")
+    h = rng.normal(size=(n, 10)).astype(np.float32)
+    params = gnn.init_params("SGC", 10, 8, 8)
+    eng = DynasparseEngine(tile_m=16, tile_n=8)     # literal=False
+    warm, cm = gnn.compile_model("SGC", eng, adj, jnp.asarray(h), params)
+    assert cm is None
+    ref = gnn.run_reference("SGC", adj, jnp.asarray(h), params)
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)

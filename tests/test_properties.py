@@ -44,6 +44,45 @@ def test_property_sparse_kernels_match_dense(nrb, ncb, nnb, da, dy, seed):
     np.testing.assert_allclose(np.asarray(got_spmm), want, rtol=2e-4, atol=2e-3)
 
 
+@pytest.mark.slow
+@settings(max_examples=20, deadline=None)
+@given(
+    M=st.integers(9, 70), K=st.integers(8, 48), N=st.integers(4, 40),
+    tm=st.sampled_from([8, 16, 24, 32]), tn=st.sampled_from([8, 12, 16]),
+    dx=st.floats(0.02, 0.9), dy=st.floats(0.02, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_compiled_eager_pertask_bit_identity(M, K, N, tm, tn,
+                                                      dx, dy, seed):
+    """Invariant (ISSUE 4): for ANY ragged/non-aligned geometry and operand
+    sparsity, the engine's compiled dispatch, the eager batched path and the
+    per-task path produce bit-identical results.  Misalignable tile sizes
+    (tm=24, tn=12) exercise the decline-and-fall-back route."""
+    from repro.core import DynasparseEngine, SparseCOO
+    from repro.core.scheduler import execute_plan
+
+    rng = np.random.default_rng(seed)
+    xd = (rng.normal(size=(M, K)) *
+          (rng.uniform(size=(M, K)) < dx)).astype(np.float32)
+    yd = (rng.normal(size=(K, N)) *
+          (rng.uniform(size=(K, N)) < dy)).astype(np.float32)
+    r, c = np.nonzero(xd)
+    x = SparseCOO(xd.shape, jnp.asarray(r.astype(np.int32)),
+                  jnp.asarray(c.astype(np.int32)),
+                  jnp.asarray(xd[r, c]), tag="adjacency")
+    eng = DynasparseEngine(tile_m=tm, tile_n=tn, literal=True,
+                           interpret=True)
+    plan = eng.plan(x, jnp.asarray(yd))
+    z_c = np.asarray(eng.execute(plan, x, jnp.asarray(yd)))
+    z_b = np.asarray(execute_plan(plan.part, plan.stq, plan.dtq, xd, yd,
+                                  batched=True, interpret=True))
+    z_p = np.asarray(execute_plan(plan.part, plan.stq, plan.dtq, xd, yd,
+                                  batched=False, interpret=True))
+    np.testing.assert_array_equal(z_c, z_b)
+    np.testing.assert_array_equal(z_c, z_p)
+    np.testing.assert_allclose(z_c, xd @ yd, rtol=2e-4, atol=2e-3)
+
+
 def _naive_attention(q, k, v, causal=False):
     B, Lq, Hq, Dh = q.shape
     _, Lk, Hkv, _ = k.shape

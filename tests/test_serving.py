@@ -303,6 +303,123 @@ def test_run_serving_restores_engine_drift_settings():
 
 
 
+# ------------------------------------------------- compiled-dispatch path
+def test_compiled_serving_steady_state_stats_and_results():
+    """After the warmup batch, EVERY micro-batch must run as one compiled
+    call (zero descriptor builds, jit trace hits) and still match the
+    per-request reference."""
+    adj = _rand_graph(seed=31)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    cache = SharedPlanCache()
+    srv = _serving("GCN", params, max_batch=4, cache=cache)
+    srv.register_graph("g", adj)
+    batches = [RNG.normal(size=(80, 12)).astype(np.float32)
+               for _ in range(16)]
+    outs = srv.serve(("g", h) for h in batches)
+    ds = srv.dispatch_stats()
+    assert srv.stats.compiled_batches == srv.stats.batches - 1
+    assert ds["dispatch_builds"] == ds["plans"]
+    assert ds["replans"] == 0
+    assert ds["trace_cache_hits"] > 0
+    # every compiled batch after the first reused the whole-model trace
+    assert ds["trace_cache_hits"] >= srv.stats.compiled_batches - 1
+    for h, z in zip(batches, outs):
+        ref = gnn.run_reference("GCN", adj, jnp.asarray(h), params)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+    srv.close()
+
+
+def test_compile_models_off_keeps_eager_path():
+    adj = _rand_graph(seed=32)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True,
+                           cache=SharedPlanCache())
+    srv = ServingEngine("GCN", params, engine=eng,
+                        config=ServingConfig(max_batch=4,
+                                             compile_models=False))
+    srv.register_graph("g", adj)
+    h = RNG.normal(size=(80, 12)).astype(np.float32)
+    outs = srv.serve([("g", h)] * 8)
+    assert srv.stats.compiled_batches == 0
+    ref = gnn.run_reference("GCN", adj, jnp.asarray(h), params)
+    for z in outs:
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+    srv.close()
+
+
+def test_compiled_drift_invalidation_recompiles():
+    """Input-density drift must drop the compiled program, replan through
+    the eager pass, recompile, and stay reference-exact."""
+    adj = _rand_graph(seed=33)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    cache = SharedPlanCache()
+    srv = _serving("GCN", params, max_batch=1, cache=cache)
+    srv.register_graph("g", adj)
+    sparse_h = (RNG.normal(size=(80, 12)) *
+                (RNG.uniform(size=(80, 12)) < 0.03)).astype(np.float32)
+    dense_h = RNG.normal(size=(80, 12)).astype(np.float32)
+    outs = srv.serve([("g", sparse_h), ("g", sparse_h),
+                      ("g", dense_h), ("g", dense_h)])
+    assert srv.stats.compile_invalidations >= 1
+    assert cache.stats.replans > 0
+    ref = gnn.run_reference("GCN", adj, jnp.asarray(dense_h), params)
+    for z in outs[2:]:
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+    srv.close()
+
+
+def test_reregistered_graph_drops_stale_compiled_program():
+    """Re-registering a graph_id with a DIFFERENT adjacency must not keep
+    serving the old graph's compiled whole-model program (the input-density
+    drift check cannot see an adjacency swap)."""
+    adj_a, adj_b = _rand_graph(seed=41), _rand_graph(seed=42)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = _serving("GCN", params, max_batch=2)
+    srv.register_graph("g", adj_a)
+    h = RNG.normal(size=(80, 12)).astype(np.float32)
+    srv.serve([("g", h)] * 4)                    # warm + compile against a
+    assert srv.stats.compiled_batches >= 1
+    srv.register_graph("g", adj_b)               # swap the graph in place
+    outs = srv.serve([("g", h)] * 2)
+    ref_b = gnn.run_reference("GCN", adj_b, jnp.asarray(h), params)
+    for z in outs:
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref_b),
+                                   rtol=1e-3, atol=1e-3)
+    srv.close()
+
+
+def test_graph_scale_sparse_only_serving_never_densifies():
+    """The graph-scale x=None batched path THROUGH the ServingEngine: an
+    all-sparse plan must serve (compiled included) without ever
+    materializing the densified adjacency."""
+    adj = _rand_graph(seed=34, n=96, nnz=200)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    cache = SharedPlanCache()
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True,
+                           mode="sparse_only", cache=cache)
+    srv = ServingEngine("GCN", params, engine=eng,
+                        config=ServingConfig(max_batch=4))
+    srv.register_graph("g", adj)
+    batches = [RNG.normal(size=(96, 12)).astype(np.float32)
+               for _ in range(8)]
+    outs = srv.serve(("g", h) for h in batches)
+    assert srv.stats.compiled_batches >= 1
+    from repro.core.plancache import PlanCache, StructureEntry
+    entries = [v for (kind, _k), v in cache.items()
+               if kind == PlanCache._STRUCT]
+    assert entries, "expected packed structure entries"
+    assert all(isinstance(e, StructureEntry) and e.dense is None
+               for e in entries)
+    for h, z in zip(batches, outs):
+        ref = gnn.run_reference("GCN", adj, jnp.asarray(h), params)
+        np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3)
+    srv.close()
+
+
 # ------------------------------------------------------- density drift
 def test_density_drift_triggers_replan_and_matches_reference():
     """Near-dense features swapped mid-stream: the sketch must catch the

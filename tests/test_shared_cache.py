@@ -132,6 +132,36 @@ def test_save_load_skips_reanalysis(tmp_path):
     np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
 
 
+def test_save_load_restores_compiled_dispatch(tmp_path):
+    """A restart must also replay zero descriptor lowering: the compiled
+    dispatch entries round-trip (arrays re-uploaded to device) and the
+    restored engine serves from them bit-identically."""
+    adj = _rand_graph(seed=9)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    h = RNG.normal(size=(64, 12)).astype(np.float32)
+
+    c1 = SharedPlanCache()
+    e1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=c1)
+    z1, _ = gnn.run_inference("GCN", e1, adj, jnp.asarray(h), params)
+    assert c1.stats.dispatch_builds >= 1
+    assert c1.dispatch_count() == c1.stats.dispatch_builds
+    path = os.fspath(tmp_path / "dispatch.pkl")
+    c1.save(path)
+
+    c2 = SharedPlanCache()
+    c2.load(path)
+    assert c2.dispatch_count() == c1.dispatch_count()
+    import jax
+    for (kind, _k), v in c2.items():
+        if kind == SharedPlanCache._DISPATCH:
+            assert all(isinstance(a, jax.Array) for a in v.arrays.values())
+    e2 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=c2)
+    z2, _ = gnn.run_inference("GCN", e2, adj, jnp.asarray(h), params)
+    assert c2.stats.dispatch_builds == 0        # served from the snapshot
+    assert c2.stats.dispatch_hits >= 1
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+
+
 def test_load_restores_device_resident_structures(tmp_path):
     """Restored packed stripes must be device arrays — the hot path may not
     pay a host->device upload per micro-batch after a restart."""
