@@ -14,11 +14,16 @@ and gates that it stays removed:
 2. **serving_steady_state** — a request stream through the ServingEngine:
    per-request latency split into warmup (first batch: plan + pack + lower
    + trace) vs steady state p50/p99, plus the compiled-path counters.
+3. **sparse_activation** — a block-sparse feature stream whose sparsity
+   pattern varies per request: post-warmup batches must run compiled WITH
+   the capacity block-skip route active (skipped-block ratio > 0, zero
+   overflows) and zero retraces across the varying patterns.
 
-``--check`` (CI) enforces the ISSUE-4 acceptance criteria: in steady state
+``--check`` (CI) enforces the ISSUE-4/5 acceptance criteria: in steady state
 ``dispatch_builds == plans``, ``replans == 0``, every post-warmup micro-batch
-runs compiled, and the jit trace cache is hit on every micro-batch after the
-first compiled one.
+runs compiled, the jit trace cache is hit on every micro-batch after the
+first compiled one, and the sparse-activation scenario keeps skipping blocks
+without a single replan, retrace or capacity overflow.
 """
 from __future__ import annotations
 
@@ -129,6 +134,48 @@ def _serving_steady_state(adj: SparseCOO, requests: int, max_batch: int,
     return out
 
 
+def _sparse_activation(adj: SparseCOO, requests: int, max_batch: int,
+                       model: str, feat: int, hidden: int) -> dict:
+    """Block-sparse features with a per-request pattern wiggle: the compiled
+    program must keep skipping activation blocks (ISSUE-5 tentpole) with
+    zero retraces while the sparsity varies within the capacity budget."""
+    rng = np.random.default_rng(3)
+    n = adj.shape[0]
+    params = gnn.init_params(model, feat, hidden, hidden)
+    B = 8
+    nrb, ncb = -(-n // B), -(-feat // B)
+    mask = np.kron((rng.uniform(size=(nrb, ncb)) < 0.3).astype(np.float32),
+                   np.ones((B, B)))[:n, :feat]
+    batches = []
+    for _ in range(requests):
+        jitter = (rng.uniform(size=(n, feat)) < 0.95)
+        batches.append((rng.normal(size=(n, feat)) * mask * jitter
+                        ).astype(np.float32))
+    cache = SharedPlanCache()
+    srv = ServingEngine(model, params,
+                        engine=DynasparseEngine(tile_m=32, tile_n=8,
+                                                literal=True, cache=cache),
+                        config=ServingConfig(max_batch=max_batch))
+    srv.register_graph("bench", adj)
+    outs = srv.serve(("bench", h) for h in batches)
+
+    ref = gnn.run_reference(model, adj, jnp.asarray(batches[0]), params)
+    err = float(np.max(np.abs(np.asarray(outs[0]) - np.asarray(ref))))
+    ds = srv.dispatch_stats()
+    act = srv.stats.activation_batches
+    out = {
+        "requests": requests,
+        "batches": srv.stats.batches,
+        "compiled_batches": srv.stats.compiled_batches,
+        "compile_invalidations": srv.stats.compile_invalidations,
+        "activation_batches": len(act),
+        "max_abs_err_vs_reference": err,
+        **ds,
+    }
+    srv.close()
+    return out
+
+
 def run(requests: int = 48, max_batch: int = 8, model: str = "GCN",
         feat: int = 24, hidden: int = 16) -> dict:
     adj = _fixed_graph()
@@ -138,6 +185,8 @@ def run(requests: int = 48, max_batch: int = 8, model: str = "GCN",
         "max_batch": max_batch,
         "kernel_level": _kernel_level(adj),
         "serving_steady_state": _serving_steady_state(
+            adj, requests, max_batch, model, feat, hidden),
+        "sparse_activation": _sparse_activation(
             adj, requests, max_batch, model, feat, hidden),
     }
 
@@ -163,6 +212,7 @@ def main() -> None:
     if args.check:
         k = res["kernel_level"]
         s = res["serving_steady_state"]
+        a = res["sparse_activation"]
         ok = (k["bit_identical"]
               and s["max_abs_err_vs_reference"] < 1e-3
               # every plan was lowered exactly once; nothing re-derived
@@ -173,6 +223,20 @@ def main() -> None:
               # ...and every compiled batch after the first hit the trace
               and s["trace_cache_hits"] >= s["compiled_batches"] - 1
               and s["trace_cache_hits"] > 0)
+        # sparse-activation route (ISSUE 5): post-warmup batches keep the
+        # block-skip active across varying patterns — no replans, no
+        # retraces (the single warmup trace serves every batch), no
+        # capacity overflows, and a real skipped-block ratio
+        ok = (ok
+              and a["max_abs_err_vs_reference"] < 1e-3
+              and a["compiled_batches"] == a["batches"] - 1
+              and a["activation_batches"] == a["compiled_batches"]
+              and a["act_kernels_last"] >= 1
+              and a["act_skipped_ratio_mean"] > 0.0
+              and a["act_overflows"] == 0
+              and a["replans"] == 0
+              and a["compile_invalidations"] == 0
+              and a["trace_cache_hits"] >= a["compiled_batches"] - 1)
         if not ok:
             raise SystemExit("[dispatch_bench] acceptance check FAILED")
         print("[dispatch_bench] acceptance check passed")

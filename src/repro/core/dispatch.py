@@ -27,9 +27,26 @@ Semantics vs the eager batched path (`scheduler._execute_batched`):
   col-stripe.  The extra pairs multiply real A blocks into exactly-zero Y
   blocks, and ``x + (±0) == x`` bitwise for every value the accumulator can
   take (it is initialized to +0 and can never become -0), so the result is
-  still bit-identical — but only when ``eps == 0``: an eps-thresholded pack
-  *drops* small-but-nonzero Y blocks the compiled path would keep, so the
-  engine declines to compile SpMM-bearing plans with ``eps != 0``.
+  still bit-identical.  With ``eps != 0`` an eps-thresholded pack *drops*
+  small-but-nonzero Y blocks the pairing would keep, so the executor applies
+  the eps mask INSIDE the traced program instead: Y blocks whose magnitudes
+  are all ``<= eps`` are zeroed on device before the kernel, turning their
+  pairs into the same exact bitwise no-ops — the pairing stays structure-
+  independent and eps-thresholded SpMM plans compile like any other.
+
+Activation-side kernels (dense X — the intermediate feature matrices) get the
+same treatment through :class:`ActivationDispatch`: the descriptor arrays are
+**capacity-parameterized** — they enumerate ``capacity`` stored-block SLOTS
+per row-stripe instead of concrete stored blocks — and the slots are filled
+at run time by the device-resident packer
+(:func:`repro.kernels.ops.pack_activation_stripes`), whose per-slot metadata
+(block-row, block-col, first-visit) rides into the fused kernels as runtime
+scalar-prefetch operands.  One trace therefore serves ANY activation sparsity
+within the stored-block budget; a batch that overflows the budget takes a
+dense-GEMM fallback INSIDE the same program (``lax.cond``), never a retrace.
+This is what recovers the paper's dynamic intermediate-data block-skip in the
+compiled whole-model steady state (ROADMAP item (a); GraphAGILE's fixed-
+budget overlay scheduling is the shape-stability precedent).
 """
 from __future__ import annotations
 
@@ -44,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.kernels.formats import BlockCSR
+from repro.kernels.formats import BlockCSR, block_nonzero_mask
 
 
 def canvas_slots(part, block: int) -> tuple[int, int] | None:
@@ -77,6 +94,9 @@ class DispatchGeometry:
     has_gemm: bool
     has_spdmm: bool
     has_spmm: bool
+    # nonzero tolerance applied to the dense operand's blocks inside the
+    # traced SpMM (sub-eps Y blocks are zeroed on device — see module doc)
+    eps: float = 0.0
 
     @property
     def m_pad(self) -> int:
@@ -233,7 +253,8 @@ def _spmm_dense_y_triples(tasks, part, stripes, offsets, R: int, C: int,
 
 
 def build_dispatch(part, stq, dtq, stripes: dict[int, "BlockCSR"],
-                   *, block: int, fingerprint: str = "") -> CompiledDispatch | None:
+                   *, block: int, eps: float = 0.0,
+                   fingerprint: str = "") -> CompiledDispatch | None:
     """Lower a planned kernel into a :class:`CompiledDispatch`.
 
     O(nnz blocks) of VECTORIZED numpy + one device upload, paid once per
@@ -252,7 +273,8 @@ def build_dispatch(part, stq, dtq, stripes: dict[int, "BlockCSR"],
         SM=SM, SN=SN, B=B, nrt=part.n_row_tiles, nct=part.n_col_tiles,
         has_gemm=bool(dtq),
         has_spdmm=any(t.primitive != "SpMM" for t in stq),
-        has_spmm=any(t.primitive == "SpMM" for t in stq))
+        has_spmm=any(t.primitive == "SpMM" for t in stq),
+        eps=eps)
     arrays: dict[str, jax.Array] = {}
 
     if dtq:
@@ -291,6 +313,47 @@ def build_dispatch(part, stq, dtq, stripes: dict[int, "BlockCSR"],
 
 
 # --------------------------------------------------------------- execution
+def _stripe_padded_y(geom, y):
+    """Dense operand laid out with each col-stripe padded to ``SN`` columns
+    and K padded to block multiples — the fused kernels' Y layout.  Works
+    for both geometry kinds (duck-typed on the shared fields)."""
+    B = geom.B
+    ncb = geom.ncb
+    y_pad = jnp.pad(y, ((0, ncb * B - geom.K),
+                        (0, geom.nct * geom.tn - geom.N)))
+    return jnp.pad(y_pad.reshape(ncb * B, geom.nct, geom.tn),
+                   ((0, 0), (0, 0), (0, geom.SN - geom.tn))
+                   ).reshape(ncb * B, geom.nct * geom.SN)
+
+
+def _masked_y_blocks(geom, y_f):
+    """Blockized dense operand with the eps mask applied on device: blocks
+    whose magnitudes are all ``<= eps`` are zeroed, so the structure-
+    independent pairing contributes exact bitwise no-ops for exactly the
+    blocks an eps-thresholded eager pack would have dropped."""
+    y_blocks = ops.blockize(y_f, geom.B)
+    if geom.eps != 0.0:
+        keep = block_nonzero_mask(y_blocks, geom.eps, axis=(-2, -1), xp=jnp)
+        y_blocks = jnp.where(keep[:, None, None], y_blocks,
+                             jnp.zeros((), y_blocks.dtype))
+    return y_blocks
+
+
+def _gemm_scatter(geom, arrays, x, y, z, *, interpret: bool):
+    """Dense-queue section shared by both dispatch kinds: gather the tasks'
+    row/col stripes and scatter one batched GEMM into the canvas."""
+    SM, SN = geom.SM, geom.SN
+    rows, cols = arrays["gemm_rows"], arrays["gemm_cols"]
+    x_p = jnp.pad(x, ((0, geom.m_pad - geom.M), (0, 0)))
+    y_p = jnp.pad(y, ((0, 0), (0, geom.nct * geom.tn - geom.N))
+                  ).reshape(geom.K, geom.nct, geom.tn)
+    if SN != geom.tn:
+        y_p = jnp.pad(y_p, ((0, 0), (0, 0), (0, SN - geom.tn)))
+    xs = x_p.reshape(geom.nrt, SM, geom.K)[rows]
+    ys = jnp.moveaxis(y_p, 1, 0)[cols]
+    return ops.gemm_batch_scatter(xs, ys, rows, cols, z, interpret=interpret)
+
+
 def apply_dispatch(geom: DispatchGeometry, arrays, x, y, *, interpret: bool):
     """Traceable end-to-end executor body: pad → batched GEMM scatter →
     fused SpDMM → fused SpMM → slice, on ONE aliased canvas.  ``x`` (the
@@ -305,23 +368,10 @@ def apply_dispatch(geom: DispatchGeometry, arrays, x, y, *, interpret: bool):
         if x is None:
             raise ValueError("compiled dispatch: dense-queue tasks need the "
                              "densified x operand (got x=None)")
-        rows, cols = arrays["gemm_rows"], arrays["gemm_cols"]
-        x_p = jnp.pad(x, ((0, M_pad - geom.M), (0, 0)))
-        y_p = jnp.pad(y, ((0, 0), (0, geom.nct * geom.tn - geom.N))
-                      ).reshape(geom.K, geom.nct, geom.tn)
-        if SN != geom.tn:
-            y_p = jnp.pad(y_p, ((0, 0), (0, 0), (0, SN - geom.tn)))
-        xs = x_p.reshape(geom.nrt, SM, geom.K)[rows]
-        ys = jnp.moveaxis(y_p, 1, 0)[cols]
-        z = ops.gemm_batch_scatter(xs, ys, rows, cols, z, interpret=interpret)
+        z = _gemm_scatter(geom, arrays, x, y, z, interpret=interpret)
 
     if geom.has_spdmm or geom.has_spmm:
-        ncb = geom.ncb
-        y_pad = jnp.pad(y, ((0, ncb * B - geom.K),
-                            (0, geom.nct * geom.tn - geom.N)))
-        y_f = jnp.pad(y_pad.reshape(ncb * B, geom.nct, geom.tn),
-                      ((0, 0), (0, 0), (0, SN - geom.tn))
-                      ).reshape(ncb * B, geom.nct * SN)
+        y_f = _stripe_padded_y(geom, y)
 
     if geom.has_spdmm:
         z = ops.spdmm_fused(
@@ -330,7 +380,7 @@ def apply_dispatch(geom: DispatchGeometry, arrays, x, y, *, interpret: bool):
             block_size=B, bn=SN, m_pad=M_pad, interpret=interpret, z=z)
 
     if geom.has_spmm:
-        y_blocks = ops.blockize(y_f, B)
+        y_blocks = _masked_y_blocks(geom, y_f)
         z = ops.spmm_fused(
             arrays["mm_pool"], y_blocks, arrays["mm_a_ids"],
             arrays["mm_y_ids"], arrays["mm_out_rows"], arrays["mm_out_cols"],
@@ -382,3 +432,233 @@ def execute_dispatch(d: CompiledDispatch, x, y, *, interpret: bool,
         else:
             stats.trace_builds += 1
     return _run_dispatch(d.geom, d.arrays, x, y, interpret=interpret)
+
+
+# ------------------------------------ activation-side capacity block-skip
+@dataclasses.dataclass(frozen=True)
+class ActivationGeometry(DispatchGeometry):
+    """Hashable static shape of a compiled ACTIVATION dispatch.
+
+    Extends :class:`DispatchGeometry` with ``cap`` — the stored-block
+    budget per row-stripe — because the descriptor arrays enumerate capacity
+    slots, not concrete stored blocks: the trace key must distinguish two
+    budgets, but NOT two sparsity patterns (that independence is the whole
+    point).  Dataclass equality is class-aware, so an activation geometry
+    never collides with an adjacency one in the jit/trace registries.
+    """
+    cap: int = 0
+
+    @property
+    def R(self) -> int:
+        return self.SM // self.B
+
+    @property
+    def C(self) -> int:
+        return self.SN // self.B
+
+
+@dataclasses.dataclass
+class ActivationDispatch:
+    """Capacity-parameterized instruction stream of one activation-side
+    (dense X) kernel.  ``arrays`` holds ONLY static int32 descriptor arrays
+    — slot ids, output col-stripes, base rows — valid for every input; the
+    data-dependent half (block payloads, per-slot block-row/col/first) is
+    produced at run time by the device packer and joined to these
+    descriptors inside the traced program."""
+    geom: ActivationGeometry
+    arrays: dict[str, jax.Array]
+    fingerprint: str
+
+    @property
+    def n_entries(self) -> int:
+        a = self.arrays.get("asp_a_ids")
+        return 0 if a is None else int(a.shape[0])
+
+    @property
+    def n_triples(self) -> int:
+        a = self.arrays.get("amm_a_ids")
+        return 0 if a is None else int(a.shape[0])
+
+
+def activation_capacity(x, part, block: int, *, eps: float = 0.0,
+                        slack: float = 1.5) -> int | None:
+    """Stored-block budget per row-stripe from a warmup activation.
+
+    Counts, per canvas row-stripe, the slots the device packer will need
+    (stored blocks plus one filler per empty block-row, canvas padding rows
+    included) and budgets ``max * slack`` so later batches whose sparsity
+    wiggles within the drift threshold still fit without a retrace.
+    ``None`` when the canvas geometry cannot take the in-place index maps.
+    """
+    slots = canvas_slots(part, block)
+    if slots is None:
+        return None
+    SM, _ = slots
+    B = block
+    S, R, C = part.n_row_tiles, SM // B, -(-part.K // B)
+    x = np.asarray(x)
+    xp = np.zeros((S * R * B, C * B), dtype=x.dtype)
+    xp[: x.shape[0], : x.shape[1]] = x
+    xb = xp.reshape(S, R, B, C, B)
+    mask = block_nonzero_mask(xb, eps, axis=(2, 4))
+    need = int(np.maximum(mask.sum(axis=2), 1).sum(axis=1).max())
+    return min(R * C, max(1, math.ceil(need * slack)))
+
+
+def build_activation_dispatch(part, stq, dtq, *, block: int, capacity: int,
+                              eps: float = 0.0, fingerprint: str = ""
+                              ) -> ActivationDispatch | None:
+    """Lower an activation-side plan into capacity-slot descriptor arrays.
+
+    Entry order is (task, slot) for SpDMM and (task, y-block-col, slot) for
+    SpMM: within one ordering unit the runtime slot metadata is row-major,
+    so every output block is still visited in ONE consecutive run (the
+    TPU output-residency obligation) for ANY stored pattern — and within a
+    run the real contributions arrive in the same (block-row, block-col)
+    order the eager host pack emits, so sums are bit-identical.  Returns
+    ``None`` for canvas geometries the in-place index maps cannot take.
+    """
+    slots = canvas_slots(part, block)
+    if slots is None:
+        return None
+    SM, SN = slots
+    B, cap = block, capacity
+    R, C = SM // B, SN // B
+    geom = ActivationGeometry(
+        M=part.M, K=part.K, N=part.N, tm=part.tile_m, tn=part.tile_n,
+        SM=SM, SN=SN, B=B, nrt=part.n_row_tiles, nct=part.n_col_tiles,
+        cap=cap, eps=eps,
+        has_gemm=bool(dtq),
+        has_spdmm=any(t.primitive != "SpMM" for t in stq),
+        has_spmm=any(t.primitive == "SpMM" for t in stq))
+    arrays: dict[str, jax.Array] = {}
+
+    if dtq:
+        arrays["gemm_rows"] = jnp.asarray(
+            np.array([t.i for t in dtq], dtype=np.int32))
+        arrays["gemm_cols"] = jnp.asarray(
+            np.array([t.j for t in dtq], dtype=np.int32))
+
+    spdmm_tasks = sorted((t for t in stq if t.primitive != "SpMM"),
+                         key=lambda t: (t.i, t.j))
+    spmm_tasks = sorted((t for t in stq if t.primitive == "SpMM"),
+                        key=lambda t: (t.i, t.j))
+
+    if spdmm_tasks:
+        i_arr = np.array([t.i for t in spdmm_tasks], dtype=np.int64)
+        j_arr = np.array([t.j for t in spdmm_tasks], dtype=np.int64)
+        slot = np.tile(np.arange(cap, dtype=np.int64), len(spdmm_tasks))
+        arrays["asp_a_ids"] = jnp.asarray(
+            (np.repeat(i_arr * cap, cap) + slot).astype(np.int32))
+        arrays["asp_out_cols"] = jnp.asarray(
+            np.repeat(j_arr, cap).astype(np.int32))
+        arrays["asp_base_rows"] = jnp.asarray(
+            np.repeat(i_arr * R, cap).astype(np.int32))
+
+    if spmm_tasks:
+        a_ids, y_cols, base_rows = [], [], []
+        for t in spmm_tasks:
+            nbj = -(-part.col_extent(t.j) // B)
+            a_ids.append(np.tile(t.i * cap + np.arange(cap, dtype=np.int64),
+                                 nbj))
+            y_cols.append(np.repeat(t.j * C + np.arange(nbj, dtype=np.int64),
+                                    cap))
+            base_rows.append(np.full(nbj * cap, t.i * R, dtype=np.int64))
+        arrays["amm_a_ids"] = jnp.asarray(
+            np.concatenate(a_ids).astype(np.int32))
+        # y block-col == output block-col for every triple of a task
+        arrays["amm_y_cols"] = jnp.asarray(
+            np.concatenate(y_cols).astype(np.int32))
+        arrays["amm_base_rows"] = jnp.asarray(
+            np.concatenate(base_rows).astype(np.int32))
+
+    return ActivationDispatch(geom=geom, arrays=arrays,
+                              fingerprint=fingerprint)
+
+
+def apply_activation_dispatch(geom: ActivationGeometry, arrays, x, y, *,
+                              interpret: bool):
+    """Traceable activation-side executor: device-pack X into capacity
+    slots, join the slot metadata to the static descriptors, and drain the
+    plan's queues on one canvas — or, when the batch overflows the budget,
+    fall back to ONE dense GEMM inside the same program (``lax.cond``:
+    same trace, no recompilation, the result is the plain dense route's).
+
+    Returns ``(z, diag)`` where ``diag`` carries the block-skip telemetry
+    the serving layer and the benchmark gate consume: ``stored`` (total
+    slots filled with real blocks), ``capacity``/``logical`` (budget and
+    full block count), and the ``overflow`` flag."""
+    B, SM, SN = geom.B, geom.SM, geom.SN
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    (pool, row_m, col_m, first_m, nnzb, real,
+     overflow) = ops.pack_activation_stripes(
+        x, block=B, n_stripes=geom.nrt, slot_rows=geom.R,
+        n_block_cols=geom.ncb, capacity=geom.cap, eps=geom.eps)
+
+    def _dense():
+        return ops.gemm(x, y, interpret=interpret, out_dtype=jnp.float32)
+
+    def _skip():
+        z = jnp.zeros((geom.m_pad, geom.n_pad), dtype=jnp.float32)
+        if geom.has_gemm:
+            z = _gemm_scatter(geom, arrays, x, y, z, interpret=interpret)
+        if geom.has_spdmm or geom.has_spmm:
+            y_f = _stripe_padded_y(geom, y)
+        if geom.has_spdmm:
+            a_ids = arrays["asp_a_ids"]
+            z = ops.spdmm_fused(
+                pool, y_f, a_ids, col_m[a_ids],
+                arrays["asp_base_rows"] + row_m[a_ids],
+                arrays["asp_out_cols"], first_m[a_ids],
+                block_size=B, bn=SN, m_pad=geom.m_pad, interpret=interpret,
+                z=z)
+        if geom.has_spmm:
+            y_blocks = _masked_y_blocks(geom, y_f)
+            a_ids = arrays["amm_a_ids"]
+            y_ids = col_m[a_ids] * (geom.nct * geom.C) + arrays["amm_y_cols"]
+            z = ops.spmm_fused(
+                pool, y_blocks, a_ids, y_ids,
+                arrays["amm_base_rows"] + row_m[a_ids],
+                arrays["amm_y_cols"], first_m[a_ids],
+                block_size=B, m_pad=geom.m_pad, n_pad=geom.n_pad,
+                interpret=interpret, z=z)
+        return z[:geom.M, :geom.N]
+
+    z = jax.lax.cond(overflow, _dense, _skip)
+    # ``stored`` counts REAL blocks (empty-row fillers excluded) and
+    # ``logical`` the block positions of the LOGICAL extent (canvas padding
+    # rows excluded), so 1 - stored/logical is the honest skip ratio: 0 for
+    # a dense activation, ~1 for an all-zero one.
+    diag = {
+        "stored": jnp.sum(real),
+        "capacity": jnp.int32(geom.nrt * geom.cap),
+        "logical": jnp.int32(-(-geom.M // geom.B) * geom.ncb),
+        "overflow": overflow,
+    }
+    return z, diag
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "interpret"))
+def _run_activation(geom, arrays, x, y, *, interpret):
+    return apply_activation_dispatch(geom, arrays, x, y, interpret=interpret)
+
+
+def execute_activation(d: ActivationDispatch, x, y, *, interpret: bool,
+                       stats=None):
+    """Run one activation-side kernel through the capacity block-skip route:
+    a single jitted call whose trace is reused for EVERY input sparsity
+    within budget.  Returns ``(z, diag)``; ``stats`` receives the same
+    trace-cache accounting as :func:`execute_dispatch`."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    key = _signature(d.geom, d.arrays, x, y, interpret)
+    with _TRACE_LOCK:
+        hit = key in _TRACE_SEEN
+        _TRACE_SEEN.add(key)
+    if stats is not None:
+        if hit:
+            stats.trace_cache_hits += 1
+        else:
+            stats.trace_builds += 1
+    return _run_activation(d.geom, d.arrays, x, y, interpret=interpret)

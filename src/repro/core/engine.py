@@ -257,16 +257,15 @@ class DynasparseEngine:
     def dispatch_for(self, plan: KernelPlan, x) -> "_dispatch.CompiledDispatch | None":
         """The plan's :class:`CompiledDispatch` (cached; lowered on first
         need), or ``None`` when the kernel is not compilable: non-literal /
-        non-batched engines, uncacheable (dense X) operands, canvas-
-        misaligned geometry, or eps-thresholded SpMM (the compiled pairing
-        is Y-structure-independent — see ``repro.core.dispatch``)."""
+        non-batched engines, uncacheable (dense X) operands, or canvas-
+        misaligned geometry.  eps-thresholded SpMM plans compile too — the
+        executor masks sub-eps Y blocks inside the traced program, so the
+        pairing stays Y-structure-independent (``repro.core.dispatch``)."""
         if not (self.literal and self.batched):
             return None
         if not isinstance(x, SparseCOO) or plan.struct_key is None:
             return None
         if _dispatch.canvas_slots(plan.part, self.block) is None:
-            return None
-        if self.eps != 0.0 and any(t.primitive == "SpMM" for t in plan.stq):
             return None
         _, entry = self._packed_structure(plan, x)
         digest = _dispatch.plan_digest(plan, self.block)
@@ -274,7 +273,39 @@ class DynasparseEngine:
             (plan.struct_key, digest),
             lambda: _dispatch.build_dispatch(
                 plan.part, plan.stq, plan.dtq, entry.stripes,
-                block=self.block, fingerprint=digest))
+                block=self.block, eps=self.eps, fingerprint=digest))
+
+    def activation_dispatch_for(
+            self, plan: KernelPlan, x, *, capacity: int | None = None,
+            slack: float = 1.5) -> "_dispatch.ActivationDispatch | None":
+        """The plan's :class:`ActivationDispatch` — the capacity-padded
+        block-skip route for a dense (activation-side) X — or ``None`` when
+        the kernel should stay dense: non-literal/non-batched engines,
+        sparse X (that is :meth:`dispatch_for`'s job), plans whose Analyzer
+        routed every task to the dense engine (dense wins — a plain GEMM is
+        the whole kernel), or canvas-misaligned geometry.
+
+        ``capacity`` fixes the per-stripe stored-block budget; by default it
+        is measured from ``x`` (the warmup activation) with ``slack``
+        headroom.  Descriptors are content-INDEPENDENT — cached on the plan
+        digest (geometry + ordered assignment) and the budget, so every
+        activation kernel with the same shape and task split shares one
+        lowering and one trace."""
+        if not (self.literal and self.batched):
+            return None
+        if isinstance(x, SparseCOO) or not plan.stq:
+            return None
+        if capacity is None:
+            capacity = _dispatch.activation_capacity(
+                x, plan.part, self.block, eps=self.eps, slack=slack)
+            if capacity is None:
+                return None
+        digest = _dispatch.plan_digest(plan, self.block)
+        return self.cache.activation_dispatch(
+            (digest, capacity, self.eps),
+            lambda: _dispatch.build_activation_dispatch(
+                plan.part, plan.stq, plan.dtq, block=self.block,
+                capacity=capacity, eps=self.eps, fingerprint=digest))
 
     def compiled_operands(
             self, plan: KernelPlan,

@@ -26,6 +26,13 @@ Two cache levels, held in ONE byte-accounted LRU store:
   fused-kernel descriptor arrays and pooled block payloads — so steady-state
   execution is one jitted call with zero host descriptor construction.
 
+- **activation-dispatch level** (plan digest + capacity + eps): the
+  capacity-parameterized descriptor arrays of an activation-side (dense X)
+  kernel (:class:`~repro.core.dispatch.ActivationDispatch`).  These are
+  content-INDEPENDENT — the block payloads are packed on device per call —
+  so, unlike every other level, they are shared across *different* operand
+  contents with one geometry/assignment/budget.
+
 Only kernels whose X operand is ``SparseCOO`` are cached: its structure is
 static by construction (the graph), and the O(nnz) fingerprint is far cheaper
 than the preprocessing it avoids.  Kernels with a dense X (activations) are
@@ -86,6 +93,17 @@ def coo_fingerprint(x: SparseCOO) -> str:
     return fp
 
 
+def key_mentions(key, fingerprint: str) -> bool:
+    """True when ``fingerprint`` appears anywhere in a (nested) cache key.
+    Every key that depends on an operand's content embeds its fingerprint
+    digest verbatim — plan keys via ``struct_key``, structure/density keys
+    directly, dispatch keys via ``struct_key`` — so a recursive scan finds
+    all of a graph's entries without knowing each level's key layout."""
+    if isinstance(key, tuple):
+        return any(key_mentions(k, fingerprint) for k in key)
+    return key == fingerprint
+
+
 def nbytes_of(obj) -> int:
     """Deep byte size of a cache entry's array payload.
 
@@ -127,6 +145,7 @@ class CacheStats:
     replans: int = 0     # density-drift revalidations that re-planned
     evictions: int = 0   # entries dropped by LRU (bytes or count bound)
     bytes_evicted: int = 0
+    invalidations: int = 0  # entries purged as stale (superseded graph)
     # compiled-dispatch level (the steady-state serving path): a build lowers
     # a plan into descriptor arrays ONCE; every later request is a hit plus a
     # jit trace-cache hit — zero host descriptor work.
@@ -134,6 +153,11 @@ class CacheStats:
     dispatch_hits: int = 0      # requests served from a cached dispatch
     trace_builds: int = 0       # end-to-end executor traces (jit misses)
     trace_cache_hits: int = 0   # executor calls that reused a trace
+    # activation-side capacity route: descriptors are content-independent
+    # (keyed on plan digest + stored-block budget), so one lowering serves
+    # every activation kernel with the same geometry/assignment/budget.
+    act_builds: int = 0         # plan -> ActivationDispatch lowerings
+    act_hits: int = 0           # kernels served from a cached act dispatch
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -184,6 +208,7 @@ class PlanCache:
 
     # entry-kind prefixes of the unified store
     _PLAN, _DENSITY, _STRUCT, _DISPATCH = "plan", "density", "struct", "dispatch"
+    _ACT = "actdispatch"
 
     def __init__(self, capacity: int = 256, max_bytes: int | None = None):
         self.capacity = capacity
@@ -219,6 +244,22 @@ class PlanCache:
             self.bytes_used -= nb
             self.stats.evictions += 1
             self.stats.bytes_evicted += nb
+
+    def purge_fingerprint(self, fingerprint: str) -> int:
+        """Drop every entry whose key embeds ``fingerprint`` (all levels:
+        plans, densities, structures, dispatches).  The invalidation hook
+        for content that is no longer reachable — e.g. a graph id was
+        re-registered with different adjacency content and nothing else
+        references the old content — so a later ``save`` cannot persist
+        (and a ``load`` cannot resurrect) its stale compiled artifacts.
+        Returns the number of entries purged."""
+        doomed = [k for k in self._entries
+                  if key_mentions(k[1], fingerprint)]
+        for k in doomed:
+            _, nb = self._entries.pop(k)
+            self.bytes_used -= nb
+            self.stats.invalidations += 1
+        return len(doomed)
 
     def recharge(self, kind: str, key) -> None:
         """Re-measure an entry whose payload mutated in place (e.g. a
@@ -309,6 +350,27 @@ class PlanCache:
         """Number of cached compiled-dispatch entries (bench gate:
         ``dispatch_builds == plan_count()`` in steady state)."""
         return sum(1 for (kind, _k) in self._entries if kind == self._DISPATCH)
+
+    def activation_dispatch(self, key: tuple, compute: Callable[[], object]):
+        """Get-or-compute an
+        :class:`~repro.core.dispatch.ActivationDispatch`.  Keyed on (plan
+        digest, capacity, eps) — content-independent by construction, so
+        activation kernels of different requests (and different layers with
+        one geometry/assignment) share one descriptor lowering.  ``None``
+        (unlowerable geometry) is never cached."""
+        d = self._get(self._ACT, key)
+        if d is not None:
+            self.stats.act_hits += 1
+            return d
+        d = compute()
+        if d is not None:
+            self.stats.act_builds += 1
+            self._put(self._ACT, key, d)
+        return d
+
+    def activation_count(self) -> int:
+        """Number of cached activation-dispatch entries."""
+        return sum(1 for (kind, _k) in self._entries if kind == self._ACT)
 
     def clear(self) -> None:
         self._entries.clear()

@@ -23,6 +23,19 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def block_nonzero_mask(blocks, eps: float, *, axis, xp=np):
+    """THE stored-block criterion, shared by every packer: a block is stored
+    iff any element is nonzero (``eps == 0``) or any magnitude exceeds
+    ``eps``.  ``axis`` selects the intra-block axes of ``blocks``; ``xp`` is
+    the array namespace (``numpy`` for the host packers / capacity
+    measurement, ``jax.numpy`` for the traceable device packer) so the
+    host- and device-side packs can never disagree on what counts as
+    stored."""
+    if eps == 0.0:
+        return xp.any(blocks != 0, axis=axis)
+    return xp.any(xp.abs(blocks) > eps, axis=axis)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BlockCSR:
@@ -117,44 +130,42 @@ def pack_blockcsr(
     padded = np.zeros((nrb * B, ncb * B), dtype=x.dtype)
     padded[:M, :K] = x
 
-    def _stored(blk):
-        return np.any(blk != 0) if eps == 0.0 else np.any(np.abs(blk) > eps)
+    # vectorized block scan (same reshape/lexsort approach as
+    # ``pack_blockcsr_coo`` — no per-block Python loop): candidate blocks in
+    # row-major order, empty block-rows refilled with a zero block at col 0
+    xb = padded.reshape(nrb, B, ncb, B).transpose(0, 2, 1, 3)
+    mask = block_nonzero_mask(xb, eps, axis=(2, 3))
+    fill_rows = np.nonzero(~mask.any(axis=1))[0]
+    r_real, c_real = np.nonzero(mask)          # row-major == (rb, cb) sorted
+    rows_a = np.concatenate([r_real, fill_rows])
+    cols_a = np.concatenate([c_real, np.zeros(len(fill_rows), np.int64)])
+    blocks_a = np.concatenate(
+        [xb[r_real, c_real], np.zeros((len(fill_rows), B, B), x.dtype)])
+    order = np.lexsort((cols_a, rows_a))       # merge fillers into row order
+    rows_a, cols_a, blocks_a = rows_a[order], cols_a[order], blocks_a[order]
+    first_a = np.ones(len(rows_a), dtype=np.int32)
+    first_a[1:] = (rows_a[1:] != rows_a[:-1]).astype(np.int32)
 
-    rows, cols, first, blocks = [], [], [], []
-    for rb in range(nrb):
-        row_has_block = False
-        for cb in range(ncb):
-            blk = padded[rb * B:(rb + 1) * B, cb * B:(cb + 1) * B]
-            if _stored(blk):
-                rows.append(rb)
-                cols.append(cb)
-                first.append(0 if row_has_block else 1)
-                blocks.append(blk)
-                row_has_block = True
-        if not row_has_block:  # keep output init coverage
-            rows.append(rb)
-            cols.append(0)
-            first.append(1)
-            blocks.append(np.zeros((B, B), dtype=x.dtype))
-
-    nnzb = len(blocks)
+    nnzb = len(rows_a)
     cap = capacity if capacity is not None else nnzb
     if cap < nnzb:
         raise ValueError(f"capacity {cap} < stored blocks {nnzb}")
-    for _ in range(cap - nnzb):
-        rows.append(nrb - 1)
-        cols.append(0)
-        first.append(0)
-        blocks.append(np.zeros((B, B), dtype=x.dtype))
+    pad = cap - nnzb
+    if pad:
+        rows_a = np.concatenate([rows_a, np.full(pad, nrb - 1, np.int64)])
+        cols_a = np.concatenate([cols_a, np.zeros(pad, np.int64)])
+        first_a = np.concatenate([first_a, np.zeros(pad, np.int32)])
+        blocks_a = np.concatenate([blocks_a,
+                                   np.zeros((pad, B, B), x.dtype)])
 
     out_dtype = dtype or x.dtype
     return BlockCSR(
         shape=(M, K),
         block_size=B,
-        row_ids=jnp.asarray(rows, dtype=jnp.int32),
-        col_ids=jnp.asarray(cols, dtype=jnp.int32),
-        first=jnp.asarray(first, dtype=jnp.int32),
-        blocks=jnp.asarray(np.stack(blocks).astype(out_dtype)),
+        row_ids=jnp.asarray(rows_a, dtype=jnp.int32),
+        col_ids=jnp.asarray(cols_a, dtype=jnp.int32),
+        first=jnp.asarray(first_a, dtype=jnp.int32),
+        blocks=jnp.asarray(blocks_a.astype(out_dtype)),
         nnzb=nnzb,
     )
 
@@ -199,10 +210,7 @@ def pack_blockcsr_coo(
     cand = np.zeros((len(uniq), B, B), dtype=vals.dtype)
     np.add.at(cand, (blk_of, rows % B, cols % B), vals)
 
-    if eps == 0.0:
-        keep = np.any(cand != 0, axis=(1, 2))
-    else:
-        keep = np.any(np.abs(cand) > eps, axis=(1, 2))
+    keep = block_nonzero_mask(cand, eps, axis=(1, 2))
     kept_keys = uniq[keep]
     kept_blocks = cand[keep]
     kept_rows = kept_keys // ncb

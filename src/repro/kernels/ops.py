@@ -15,7 +15,8 @@ import numpy as np
 from repro.kernels import gemm as _gemm
 from repro.kernels import spdmm as _spdmm
 from repro.kernels import spmm as _spmm
-from repro.kernels.formats import BlockCSR, pack_blockcsr
+from repro.kernels.formats import (BlockCSR, block_nonzero_mask,
+                                   pack_blockcsr)
 
 
 def default_interpret() -> bool:
@@ -164,6 +165,75 @@ def blockize(y, block: int):
         r * c, block, block)
 
 
+def pack_activation_stripes(x, *, block: int, n_stripes: int, slot_rows: int,
+                            n_block_cols: int, capacity: int,
+                            eps: float = 0.0):
+    """Traceable capacity-padded BlockCSR packing of a dense activation.
+
+    The device-resident analogue of per-row-stripe :func:`pack_blockcsr` —
+    runs INSIDE a jitted program (no host round-trip), with **fixed shapes**
+    so one trace serves any activation sparsity within the stored-block
+    budget.  ``x`` is the dense ``(M, K)`` operand; each of the
+    ``n_stripes`` canvas row-stripes (``slot_rows`` block-rows tall) is
+    packed into exactly ``capacity`` block slots:
+
+    - stored blocks (any ``|elem| > eps``; ``!= 0`` when ``eps == 0``) fill
+      slots in row-major (block-row, block-col) order — the same order
+      ``pack_blockcsr`` emits;
+    - block-rows with no stored block keep one zero block at column 0 with
+      ``first = 1`` (output-init coverage), including the canvas padding
+      rows past the logical extent;
+    - remaining slots are the capacity-padding convention: zero block at
+      the LAST block-row, column 0, ``first = 0`` — exact bitwise no-ops.
+
+    Returns ``(blocks, row_ids, col_ids, first, nnzb, real, overflow)``:
+    the pooled ``(n_stripes * capacity, B, B)`` slot payloads, the flat
+    per-slot metadata (int32, indexable by ``stripe * capacity + slot``),
+    the per-stripe SLOT counts (stored blocks + empty-row fillers — what
+    the budget must cover), the per-stripe count of REAL stored blocks
+    (fillers excluded — the honest skip telemetry), and a scalar bool that
+    is True when ANY stripe needs more than ``capacity`` slots (blocks past
+    the budget are dropped — the caller must take its dense fallback).
+    """
+    B, S, R, C = block, n_stripes, slot_rows, n_block_cols
+    x = jnp.asarray(x)
+    M, K = x.shape
+    xp = jnp.pad(x, ((0, S * R * B - M), (0, C * B - K)))
+    xb = xp.reshape(S, R, B, C, B).transpose(0, 1, 3, 2, 4)   # (S,R,C,B,B)
+    mask = block_nonzero_mask(xb, eps, axis=(-2, -1), xp=jnp)
+    row_has = jnp.any(mask, axis=2)                           # (S, R)
+    col0 = jax.lax.broadcasted_iota(jnp.int32, (S, R, C), 2) == 0
+    stored = mask | ((~row_has)[:, :, None] & col0)
+    first = stored & (jnp.cumsum(stored.astype(jnp.int32), axis=2) == 1)
+
+    flat = stored.reshape(S, R * C)
+    cnt = jnp.cumsum(flat.astype(jnp.int32), axis=1)
+    slot = cnt - 1
+    nnzb = cnt[:, -1]
+    # filler/padding slots carry EXACT zero blocks (jnp.where, not a mask
+    # multiply: ``-x * 0 == -0.0`` would leak signed zeros into the pool)
+    blocks = jnp.where(mask[..., None, None], xb,
+                       jnp.zeros((), x.dtype)).reshape(S, R * C, B, B)
+    r_idx = jax.lax.broadcasted_iota(jnp.int32, (S, R, C), 1).reshape(S, R * C)
+    c_idx = jax.lax.broadcasted_iota(jnp.int32, (S, R, C), 2).reshape(S, R * C)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (S, R * C), 0)
+    # scatter each stored block to its slot; non-stored and over-budget
+    # blocks target slot == capacity, which 'drop' discards
+    tgt = jnp.where(flat & (slot < capacity), slot, capacity)
+    pool = jnp.zeros((S, capacity, B, B), x.dtype
+                     ).at[s_idx, tgt].set(blocks, mode="drop")
+    row_ids = jnp.full((S, capacity), R - 1, jnp.int32
+                       ).at[s_idx, tgt].set(r_idx, mode="drop")
+    col_ids = jnp.zeros((S, capacity), jnp.int32
+                        ).at[s_idx, tgt].set(c_idx, mode="drop")
+    first_f = jnp.zeros((S, capacity), jnp.int32).at[s_idx, tgt].set(
+        first.reshape(S, R * C).astype(jnp.int32), mode="drop")
+    return (pool.reshape(S * capacity, B, B), row_ids.reshape(-1),
+            col_ids.reshape(-1), first_f.reshape(-1), nnzb,
+            jnp.sum(mask.astype(jnp.int32), axis=(1, 2)),
+            jnp.any(nnzb > capacity))
+
+
 def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,
          out_dtype=jnp.float32):
     """Block-sparse ``a @ y`` with both operands sparse."""
@@ -190,8 +260,8 @@ def spmm_fused(a_blocks, y_blocks, a_ids, y_ids, out_rows, out_cols, first, *,
 
 
 __all__ = [
-    "BlockCSR", "pack_blockcsr", "blockize", "gemm", "gemm_batch",
-    "gemm_batch_scatter",
+    "BlockCSR", "pack_blockcsr", "pack_activation_stripes", "blockize",
+    "gemm", "gemm_batch", "gemm_batch_scatter",
     "spdmm", "spdmm_fused", "spmm", "spmm_fused", "default_interpret",
     "pallas_call_count", "reset_pallas_call_count",
 ]

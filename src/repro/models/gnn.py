@@ -144,16 +144,22 @@ class CompiledModel:
     keep reflecting that amortization.
     """
     model: str
-    run: Callable                 # jitted replay: run(payload, h) -> logits
+    run: Callable                 # jitted replay: run(payload, h)
+                                  #   -> (logits, activation diags)
     payload: list                 # per-kernel descriptor/pool pytrees
     report: EngineReport          # warmup report template (plan simulations)
     input_sketch: np.ndarray      # col-density sketch of the warmup features
     sketch_tile: int
     n_kernels: int
     n_sparse: int
+    n_act: int = 0                # kernels on the capacity block-skip route
     stats: object | None = None   # CacheStats receiving call accounting
     calls: int = 0
     traces: int = 0               # distinct input signatures (jit retraces)
+    # per-activation-kernel telemetry of the LAST call: stored/capacity/
+    # logical block counts + overflow flag (device scalars; see
+    # repro.core.dispatch.apply_activation_dispatch)
+    last_activation: list = dataclasses.field(default_factory=list)
     _seen: set = dataclasses.field(default_factory=set)
 
     def drifted(self, h, threshold: float, *, max_rows: int = 256,
@@ -185,11 +191,13 @@ class CompiledModel:
             else:
                 self.stats.trace_cache_hits += 1
             self.stats.plan_hits += self.n_sparse
-        return self.run(self.payload, h)
+        logits, self.last_activation = self.run(self.payload, h)
+        return logits
 
 
 def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
-                  *, transport=None):
+                  *, transport=None, activation_skip: bool = True,
+                  activation_slack: float = 1.5):
     """Fuse all layer kernels of (model, graph, feature shape) into a single
     jitted program; returns ``(warmup logits, CompiledModel | None)``.
 
@@ -198,17 +206,23 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
     amortized state a later eager call would also use), while this function
     records each kernel's :class:`~repro.core.dispatch.CompiledDispatch`.
     The replay then re-traces the model with every adjacency kernel inlined
-    as its compiled-dispatch body and every activation-side kernel as one
-    dense Pallas GEMM, the whole sequence under ONE ``jax.jit``.
+    as its compiled-dispatch body, the whole sequence under ONE ``jax.jit``.
+
+    Activation-side (dense X) kernels choose their route per layer from the
+    recorded warmup pass: when the warmup plan's Analyzer routed tasks to
+    the sparse engine, the kernel is inlined as the capacity-padded
+    block-skip route (:class:`~repro.core.dispatch.ActivationDispatch` —
+    zero blocks of the intermediate features are skipped with FIXED shapes,
+    budgeted at ``activation_slack`` headroom over the warmup's stored
+    blocks; a batch that overflows the budget falls back to a dense GEMM
+    inside the same program, never a retrace).  When the Analyzer sent
+    everything to the dense engine — dense activations win — the kernel
+    stays one dense Pallas GEMM.  ``activation_skip=False`` forces the
+    dense-GEMM route for every activation kernel (PR-4 behaviour).
 
     ``None`` (second element) when any adjacency kernel has no compiled
-    dispatch — non-literal/non-batched engines, canvas-misaligned geometry,
-    eps-thresholded SpMM — in which case the caller keeps the eager path.
-
-    Note the activation-side trade: the eager engine may route sparse
-    activations to the block-skip kernels, which the compiled program cannot
-    (their block structure is data-dependent, the program is static).  The
-    results agree to float tolerance; the skip is traded for zero host work.
+    dispatch — non-literal/non-batched engines, canvas-misaligned geometry
+    — in which case the caller keeps the eager path.
 
     ``transport`` optionally wraps the abstract ``mm`` with a representation
     transform (the serving layer's column-stack/row-unstack transport) and
@@ -216,7 +230,8 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
     """
     transport = transport if transport is not None else (lambda mm: mm)
     h = jnp.asarray(h)
-    records: list[tuple[str, object]] = []   # ("sparse", geom) | ("gemm", _)
+    # ("sparse", geom) | ("act", geom) | ("gemm", None) per kernel
+    records: list[tuple[str, object]] = []
     payload: list = []
     compilable = [True]
     n0 = len(engine.report.kernels)
@@ -234,8 +249,15 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
                 records.append(("sparse", d.geom))
                 payload.append({"arrays": dict(d.arrays), "xd": xd})
         else:
-            records.append(("gemm", None))
-            payload.append(None)
+            ad = (engine.activation_dispatch_for(
+                      engine.last_plan, x, slack=activation_slack)
+                  if activation_skip else None)
+            if ad is None:
+                records.append(("gemm", None))
+                payload.append(None)
+            else:
+                records.append(("act", ad.geom))
+                payload.append({"arrays": dict(ad.arrays)})
         return z
 
     logits = APPLY[model](transport(recording), adj, h, params)
@@ -247,6 +269,7 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
 
     def replay(payload_, hh):
         ctr = itertools.count()
+        act_diags = []
 
         def mm(x, y, name="kernel"):
             i = next(ctr)
@@ -255,10 +278,16 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
                 return ops.gemm(jnp.asarray(x), jnp.asarray(y),
                                 interpret=interpret, out_dtype=jnp.float32)
             p = payload_[i]
+            if kind == "act":
+                z, diag = _dispatch.apply_activation_dispatch(
+                    geom, p["arrays"], x, y, interpret=interpret)
+                act_diags.append(diag)
+                return z
             return _dispatch.apply_dispatch(geom, p["arrays"], p["xd"], y,
                                             interpret=interpret)
 
-        return APPLY[model](transport(mm), adj, hh, params)
+        out = APPLY[model](transport(mm), adj, hh, params)
+        return out, act_diags
 
     tn = engine.tile_n or min(128, int(h.shape[1]))
     sketch = sparsity.sketch_col_density(h, tn, max_rows=engine.sketch_rows,
@@ -270,6 +299,7 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
         input_sketch=np.asarray(sketch), sketch_tile=tn,
         n_kernels=len(records),
         n_sparse=sum(1 for k, _ in records if k == "sparse"),
+        n_act=sum(1 for k, _ in records if k == "act"),
         stats=engine.cache.stats)
 
 

@@ -29,11 +29,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dispatch import CompiledDispatch
-from repro.core.plancache import PlanCache, StructureEntry
+from repro.core.plancache import PlanCache, StructureEntry, key_mentions
 from repro.core.primitives import SparseCOO
 from repro.core.plancache import coo_fingerprint
 
-_PERSIST_VERSION = 1
+# v2: DispatchGeometry grew the static ``eps`` field and the activation-
+# dispatch entry kind was added — v1 snapshots would restore geometry
+# objects missing attributes, so they are rejected instead of resurrected.
+_PERSIST_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,9 +84,10 @@ def _struct_to_device(entry: StructureEntry) -> StructureEntry:
     return StructureEntry(stripes=stripes, dense=dense)
 
 
-def _dispatch_to_device(d: CompiledDispatch) -> CompiledDispatch:
-    """Re-upload a restored compiled dispatch's descriptor arrays and block
-    pools — a restarted serving process replays zero descriptor lowering."""
+def _dispatch_to_device(d):
+    """Re-upload a restored compiled/activation dispatch's descriptor arrays
+    (and, for :class:`CompiledDispatch`, pooled block payloads) — a
+    restarted serving process replays zero descriptor lowering."""
     return dataclasses.replace(
         d, arrays={k: jnp.asarray(v) for k, v in d.arrays.items()})
 
@@ -143,6 +147,18 @@ class SharedPlanCache(PlanCache):
         with self._lock:
             return super().dispatch_count()
 
+    def activation_dispatch(self, key, compute):
+        with self._lock:
+            return super().activation_dispatch(key, compute)
+
+    def activation_count(self):
+        with self._lock:
+            return super().activation_count()
+
+    def purge_fingerprint(self, fingerprint):
+        with self._lock:
+            return super().purge_fingerprint(fingerprint)
+
     def items(self):
         with self._lock:
             yield from list(super().items())
@@ -160,13 +176,23 @@ class SharedPlanCache(PlanCache):
     def register_graph(self, graph_id: str, adj: SparseCOO) -> GraphKey:
         """Register (or re-register) a graph under ``graph_id``.
 
-        Re-registering the same id with a DIFFERENT graph is allowed — the
-        old graph's cache entries age out by LRU; the registry always maps
-        the id to the latest content key.
+        Re-registering the same id with DIFFERENT content purges the old
+        content's cache entries — plans, packed structures and compiled
+        dispatches — unless another registered id still maps to that
+        content.  Waiting for LRU aging is not enough: ``save`` would
+        snapshot the stale entries and every later ``load`` would resurrect
+        them (including device-resident ``CompiledDispatch`` payloads),
+        growing the snapshot by one dead graph per re-registration and
+        squatting in the byte budget forever.
         """
         key = GraphKey.of(adj)
         with self._lock:
+            old = self._graphs.get(graph_id)
             self._graphs[graph_id] = key
+            if (old is not None and old.fingerprint != key.fingerprint
+                    and not any(k.fingerprint == old.fingerprint
+                                for k in self._graphs.values())):
+                self.purge_fingerprint(old.fingerprint)
         return key
 
     def graph_key(self, graph_id: str) -> GraphKey | None:
@@ -206,6 +232,13 @@ class SharedPlanCache(PlanCache):
         cached (existing entries stay most-recent).  Stats are not restored
         — hit/miss counting starts fresh, which is what a restarted serving
         process wants to observe.
+
+        Live registrations win over the snapshot: a graph id already
+        registered in THIS process keeps its mapping, and snapshot entries
+        whose content key belongs to an id the live registry has since
+        re-bound to different content are SKIPPED — restoring them would
+        resurrect a stale ``CompiledDispatch`` (old adjacency's descriptors
+        and block payloads) under the superseded content key.
         """
         with open(path, "rb") as f:
             payload = pickle.load(f)
@@ -213,21 +246,37 @@ class SharedPlanCache(PlanCache):
             raise ValueError(
                 f"unsupported plan-cache snapshot version "
                 f"{payload.get('version')!r} (want {_PERSIST_VERSION})")
+        snap_graphs: dict[str, GraphKey] = payload["graphs"]
         with self._lock:
+            # fingerprints the live registry has superseded — unless some
+            # current (or non-conflicting snapshot) id still maps to them
+            stale = {key.fingerprint for gid, key in snap_graphs.items()
+                     if gid in self._graphs
+                     and self._graphs[gid].fingerprint != key.fingerprint}
+            stale -= {k.fingerprint for k in self._graphs.values()}
+            stale -= {key.fingerprint for gid, key in snap_graphs.items()
+                      if gid not in self._graphs}
+
             live = list(self.items())
             self._entries.clear()
             self.bytes_used = 0
+            loaded = skipped = 0
             for (kind, key), value in payload["entries"]:
+                if any(key_mentions(key, fp) for fp in stale):
+                    skipped += 1
+                    continue
                 if kind == self._STRUCT:
                     value = _struct_to_device(value)
-                elif kind == self._DISPATCH:
+                elif kind in (self._DISPATCH, self._ACT):
                     value = _dispatch_to_device(value)
                 super()._put(kind, key, value)
+                loaded += 1
             for (kind, key), value in live:
                 super()._put(kind, key, value)
-            self._graphs.update(payload["graphs"])
-            return {"entries": len(payload["entries"]),
-                    "graphs": len(payload["graphs"])}
+            for gid, key in snap_graphs.items():
+                self._graphs.setdefault(gid, key)
+            return {"entries": loaded, "stale_skipped": skipped,
+                    "graphs": len(snap_graphs)}
 
 
 # --------------------------------------------------------------- singleton

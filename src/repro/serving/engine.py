@@ -39,6 +39,7 @@ import dataclasses
 import time
 from typing import Iterable, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -81,6 +82,14 @@ class ServingConfig:
     # registry pins descriptor/operand arrays outside the byte-accounted
     # plan cache, so a many-graph engine must not grow it without limit.
     max_compiled: int = 32
+    # Sparse-activation block-skip inside compiled programs: activation-side
+    # kernels whose warmup plan routed tasks to the sparse engine run on the
+    # capacity-padded BlockCSR route (fixed stored-block budget =
+    # ``activation_slack`` headroom over the warmup's measured blocks;
+    # overflow falls back to a dense GEMM inside the same program).  Off →
+    # every activation kernel is one dense Pallas GEMM (PR-4 behaviour).
+    activation_skip: bool = True
+    activation_slack: float = 1.5
 
 
 @dataclasses.dataclass
@@ -110,6 +119,21 @@ class ServingStats:
     # requests are visible via `RequestStats.error`), so len(batch_reports)
     # == batches - failed batches.
     batch_reports: list[EngineReport] = dataclasses.field(default_factory=list)
+    # per COMPILED batch with activation-route kernels: aggregated block-skip
+    # telemetry {stored, capacity, logical, overflows, skipped_ratio} summed
+    # over that batch's activation kernels (the bench gate's surface)
+    activation_batches: list[dict] = dataclasses.field(default_factory=list)
+    # running aggregates of the same telemetry, so dispatch_stats() stays
+    # O(1) instead of re-reducing the per-batch history on every call
+    act_overflows: int = 0
+    act_skipped_sum: float = 0.0
+    act_kernels_last: int = 0
+
+    def record_activation(self, summary: dict) -> None:
+        self.activation_batches.append(summary)
+        self.act_overflows += summary["overflows"]
+        self.act_skipped_sum += summary["skipped_ratio"]
+        self.act_kernels_last = summary["kernels"]
 
     def latency_percentiles(self) -> dict:
         if not self.requests:
@@ -179,6 +203,25 @@ def stacked_transport(mm: gnn.MM) -> gnn.MM:
     return wrapped
 
 
+def _activation_summary(diags: list[dict]) -> dict:
+    """Aggregate one compiled batch's per-kernel activation telemetry into
+    host floats (the batch's logits are already computed, so pulling these
+    scalars costs ONE small transfer, not a sync per field)."""
+    diags = jax.device_get(diags)
+    stored = sum(int(d["stored"]) for d in diags)
+    capacity = sum(int(d["capacity"]) for d in diags)
+    logical = sum(int(d["logical"]) for d in diags)
+    overflows = sum(int(bool(d["overflow"])) for d in diags)
+    return {
+        "kernels": len(diags),
+        "stored_blocks": stored,
+        "capacity_blocks": capacity,
+        "logical_blocks": logical,
+        "overflows": overflows,
+        "skipped_ratio": 1.0 - stored / max(1, logical),
+    }
+
+
 def batched_mm(engine: DynasparseEngine) -> gnn.MM:
     """The stacked-representation matmul the model zoo is applied against
     (the eager path: every kernel goes through ``engine.matmul``)."""
@@ -235,15 +278,24 @@ class ServingEngine:
         the underlying cache plus this engine's compiled-program registry
         (the dispatch benchmark's acceptance surface)."""
         s = self.engine.cache.stats
+        st = self.stats
+        n_act = len(st.activation_batches)
         return {
             "plans": self.engine.cache.plan_count(),
             "dispatch_builds": s.dispatch_builds,
             "dispatch_hits": s.dispatch_hits,
+            "act_builds": s.act_builds,
+            "act_hits": s.act_hits,
             "trace_builds": s.trace_builds,
             "trace_cache_hits": s.trace_cache_hits,
             "replans": s.replans,
             "compiled_models": len(self._compiled),
-            "compiled_batches": self.stats.compiled_batches,
+            "compiled_batches": st.compiled_batches,
+            # sparse-activation route telemetry (running aggregates)
+            "act_kernels_last": st.act_kernels_last,
+            "act_overflows": st.act_overflows,
+            "act_skipped_ratio_mean": (st.act_skipped_sum / n_act
+                                       if n_act else 0.0),
         }
 
     def close(self) -> None:
@@ -418,12 +470,17 @@ class ServingEngine:
                 logits = cm(h)
                 report = cm.fresh_report()
                 compiled = True
+                if cm.last_activation:
+                    self.stats.record_activation(
+                        _activation_summary(cm.last_activation))
             else:
                 self.engine.reset()
                 if self.config.compile_models:
                     logits, built = gnn.compile_model(
                         self.model, self.engine, adj, h, self.params,
-                        transport=stacked_transport)
+                        transport=stacked_transport,
+                        activation_skip=self.config.activation_skip,
+                        activation_slack=self.config.activation_slack)
                     if built is not None:
                         self._compiled[cm_key] = built
                         while len(self._compiled) > self.config.max_compiled:

@@ -109,20 +109,31 @@ def test_steady_state_builds_nothing_and_hits_trace():
     np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
 
 
-def test_eps_spmm_declines_compiled_but_matches():
-    """eps != 0 with SpMM tasks must decline compilation (the compiled
-    pairing is Y-structure-independent and would keep eps-skipped blocks)
-    and fall back to the eager path — still correct."""
+@pytest.mark.parametrize("eps", [1e-7, 0.2])
+def test_eps_spmm_compiles_bit_identically(eps):
+    """Regression (ISSUE 5): eps != 0 with SpMM tasks used to DECLINE
+    compilation and silently stay eager.  The eps-aware masked pairing
+    (sub-eps Y blocks zeroed inside the traced program) lifts the gate:
+    such plans now compile and the compiled result is bit-identical to
+    both eager paths under the same eps."""
     xd, yd = _mixed_ragged_operands(seed=4)
     x = _coo_of(xd)
-    eng = DynasparseEngine(tile_m=32, tile_n=24, literal=True, eps=1e-7)
+    eng = DynasparseEngine(tile_m=32, tile_n=24, literal=True, eps=eps)
     plan = eng.plan(x, jnp.asarray(yd))
     if not any(t.primitive == "SpMM" for t in plan.stq):
         pytest.skip("plan routed no SpMM tasks")
-    assert eng.dispatch_for(plan, x) is None
-    z, _ = eng.matmul(x, jnp.asarray(yd))
-    assert eng.cache.stats.dispatch_builds == 0
-    np.testing.assert_allclose(np.asarray(z), xd @ yd, rtol=1e-4, atol=1e-4)
+    assert eng.dispatch_for(plan, x) is not None
+    z_c = eng.execute(plan, x, jnp.asarray(yd))
+    assert eng.cache.stats.dispatch_builds == 1
+    z_b = execute_plan(plan.part, plan.stq, plan.dtq, xd, yd,
+                       batched=True, eps=eps)
+    z_p = execute_plan(plan.part, plan.stq, plan.dtq, xd, yd,
+                       batched=False, eps=eps)
+    np.testing.assert_array_equal(np.asarray(z_c), np.asarray(z_b))
+    np.testing.assert_array_equal(np.asarray(z_c), np.asarray(z_p))
+    if eps <= 1e-6:     # tolerance below the operands' magnitude floor:
+        np.testing.assert_allclose(np.asarray(z_c), xd @ yd,   # == dense
+                                   rtol=1e-4, atol=1e-4)
 
 
 def test_misaligned_geometry_declines_compiled_but_matches():

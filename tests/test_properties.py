@@ -83,6 +83,75 @@ def test_property_compiled_eager_pertask_bit_identity(M, K, N, tm, tn,
     np.testing.assert_allclose(z_c, xd @ yd, rtol=2e-4, atol=2e-3)
 
 
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(
+    M=st.integers(9, 70), K=st.integers(8, 48), N=st.integers(4, 40),
+    tm=st.sampled_from([8, 16, 32]), tn=st.sampled_from([8, 16, 24]),
+    bd=st.floats(0.0, 0.6), dy=st.floats(0.02, 1.0),
+    eps=st.sampled_from([0.0, 0.05]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    capmode=st.sampled_from(["auto", "exact", "slack", "overflow"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_activation_skip_bit_identity(M, K, N, tm, tn, bd, dy, eps,
+                                               dtype, capmode, seed):
+    """Invariant (ISSUE 5): for ANY ragged geometry, activation block
+    pattern, dtype, eps, and capacity within budget, the compiled capacity
+    block-skip route is bit-identical to the eager batched AND per-task
+    paths; a capacity below the need flips the in-program overflow fallback
+    to the plain dense GEMM (bit-identical to that route instead)."""
+    from repro.core import DynasparseEngine
+    from repro.core import dispatch as dispatch_mod
+    from repro.core.scheduler import execute_plan
+    from repro.kernels import ops as kops
+
+    if dtype == "bfloat16":
+        import ml_dtypes
+        np_dtype = ml_dtypes.bfloat16
+    else:
+        np_dtype = np.float32
+    rng = np.random.default_rng(seed)
+    B = 8
+    nrb, ncb = -(-M // B), -(-K // B)
+    mask = (rng.uniform(size=(nrb, ncb)) < bd).astype(np.float32)
+    xd = ((rng.normal(size=(nrb * B, ncb * B))
+           * np.kron(mask, np.ones((B, B))))[:M, :K]).astype(np_dtype)
+    yd = (rng.normal(size=(K, N)) *
+          (rng.uniform(size=(K, N)) < dy)).astype(np.float32)
+    eng = DynasparseEngine(tile_m=tm, tile_n=tn, literal=True,
+                           interpret=True, eps=eps)
+    plan = eng.plan(xd, jnp.asarray(yd))
+    if not plan.stq:
+        return                                    # dense wins: no route
+    need = dispatch_mod.activation_capacity(xd, plan.part, B, eps=eps,
+                                            slack=1.0)
+    if need is None:
+        return                                    # misaligned canvas
+    cap = {"auto": None, "exact": need, "slack": need + 3,
+           "overflow": max(1, need - 1)}[capmode]
+    ad = eng.activation_dispatch_for(plan, xd, capacity=cap)
+    assert ad is not None
+    z_a, diag = dispatch_mod.execute_activation(ad, xd, yd, interpret=True)
+    z_a = np.asarray(z_a)
+    if capmode == "overflow" and need > 1:
+        assert bool(diag["overflow"])
+        z_d = kops.gemm(jnp.asarray(xd), jnp.asarray(yd), interpret=True,
+                        out_dtype=jnp.float32)
+        np.testing.assert_array_equal(z_a, np.asarray(z_d))
+        return
+    assert not bool(diag["overflow"])
+    z_b = np.asarray(execute_plan(plan.part, plan.stq, plan.dtq, xd, yd,
+                                  batched=True, interpret=True, eps=eps))
+    z_p = np.asarray(execute_plan(plan.part, plan.stq, plan.dtq, xd, yd,
+                                  batched=False, interpret=True, eps=eps))
+    np.testing.assert_array_equal(z_a, z_b)
+    np.testing.assert_array_equal(z_a, z_p)
+    if eps == 0.0:
+        np.testing.assert_allclose(
+            z_a, np.asarray(xd, np.float32) @ yd, rtol=2e-2, atol=2e-2)
+
+
 def _naive_attention(q, k, v, causal=False):
     B, Lq, Hq, Dh = q.shape
     _, Lk, Hkv, _ = k.shape

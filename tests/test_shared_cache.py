@@ -182,6 +182,82 @@ def test_load_restores_device_resident_structures(tmp_path):
             assert isinstance(bcsr.row_ids, jax.Array)
 
 
+def test_reregister_purges_superseded_content(tmp_path):
+    """Regression (ISSUE 5): re-registering a graph_id with different
+    adjacency content used to leave the old content's entries in the cache;
+    a save()/load() round-trip then resurrected the stale CompiledDispatch
+    (old descriptors + block payloads) under the superseded key, growing
+    the snapshot by one dead graph per swap and squatting in the byte
+    budget.  Re-registration must purge them — unless another id still
+    maps to the same content."""
+    from repro.core.plancache import key_mentions
+
+    adjA, adjB = _rand_graph(seed=21), _rand_graph(seed=22)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    h = RNG.normal(size=(64, 12)).astype(np.float32)
+
+    cache = SharedPlanCache()
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache)
+    gnn.run_inference("GCN", eng, adjA, jnp.asarray(h), params)
+    fpA = GraphKey.of(adjA).fingerprint
+    cache.register_graph("g", adjA)
+    nA = sum(1 for (k, key), _ in cache.items() if key_mentions(key, fpA))
+    assert nA > 0 and cache.dispatch_count() >= 1
+
+    # second id on the same content protects it ...
+    cache.register_graph("g2", adjA)
+    cache.register_graph("g", adjB)
+    assert sum(1 for (k, key), _ in cache.items()
+               if key_mentions(key, fpA)) == nA
+    # ... dropping the last reference purges every level of the old content
+    cache.register_graph("g2", adjB)
+    assert sum(1 for (k, key), _ in cache.items()
+               if key_mentions(key, fpA)) == 0
+    assert cache.stats.invalidations == nA
+
+    # and a save after the swap can no longer resurrect it cross-restart
+    path = os.fspath(tmp_path / "swap.pkl")
+    cache.save(path)
+    c2 = SharedPlanCache()
+    c2.load(path)
+    assert not any(key_mentions(key, fpA) for (k, key), _ in c2.items())
+
+
+def test_load_skips_entries_of_superseded_registration(tmp_path):
+    """Cross-restart regression (ISSUE 5): a restarted process that
+    registers the changed graph BEFORE loading the old snapshot must not
+    resurrect the superseded content's entries, and the live registry
+    mapping must win over the snapshot's."""
+    from repro.core.plancache import key_mentions
+
+    adjA, adjB = _rand_graph(seed=23), _rand_graph(seed=24)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    h = RNG.normal(size=(64, 12)).astype(np.float32)
+
+    c1 = SharedPlanCache()
+    e1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=c1)
+    gnn.run_inference("GCN", e1, adjA, jnp.asarray(h), params)
+    c1.register_graph("g", adjA)
+    path = os.fspath(tmp_path / "restart.pkl")
+    c1.save(path)
+    fpA = GraphKey.of(adjA).fingerprint
+    nA = sum(1 for (k, key), _ in c1.items() if key_mentions(key, fpA))
+
+    # "restart": the graph under id g changed to B before the load
+    c2 = SharedPlanCache()
+    c2.register_graph("g", adjB)
+    manifest = c2.load(path)
+    assert manifest["stale_skipped"] == nA
+    assert not any(key_mentions(key, fpA) for (k, key), _ in c2.items())
+    assert c2.graphs["g"] == GraphKey.of(adjB)      # live mapping wins
+    # serving B through the restored cache stays correct
+    e2 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=c2)
+    z, _ = gnn.run_inference("GCN", e2, adjB, jnp.asarray(h), params)
+    ref = gnn.run_reference("GCN", adjB, jnp.asarray(h), params)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
 def test_load_rejects_unknown_version(tmp_path):
     import pickle
     path = os.fspath(tmp_path / "bad.pkl")
