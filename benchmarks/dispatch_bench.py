@@ -18,24 +18,42 @@ and gates that it stays removed:
    pattern varies per request: post-warmup batches must run compiled WITH
    the capacity block-skip route active (skipped-block ratio > 0, zero
    overflows) and zero retraces across the varying patterns.
+4. **calibration** — the measured performance model (ISSUE 7): a fallback
+   hardware model is calibrated against the real Pallas kernels once, the
+   calibrated STQ/DTQ assignment's compiled execute is timed against the
+   static-guess assignment on the same kernel, and a simulated restart
+   (SharedPlanCache save/load) must replay the calibration with ZERO
+   re-measures.
+5. **per_stripe_budget** — skew-aware activation budgets (ISSUE 7 leg 2):
+   on a skewed activation the per-stripe budget vector must cut padded-slot
+   waste ≥20% vs the uniform budget, overflow-free, retrace-free and
+   bit-identical to the eager path.
 
-``--check`` (CI) enforces the ISSUE-4/5 acceptance criteria: in steady state
-``dispatch_builds == plans``, ``replans == 0``, every post-warmup micro-batch
-runs compiled, the jit trace cache is hit on every micro-batch after the
-first compiled one, and the sparse-activation scenario keeps skipping blocks
-without a single replan, retrace or capacity overflow.
+``--check`` (CI) enforces the ISSUE-4/5/7 acceptance criteria: in steady
+state ``dispatch_builds == plans``, ``replans == 0``, every post-warmup
+micro-batch runs compiled, the jit trace cache is hit on every micro-batch
+after the first compiled one, the sparse-activation scenario keeps skipping
+blocks without a single replan, retrace or capacity overflow (and its
+steady-state act_hits grow), calibration replays from the cache with zero
+re-measures while its assignment executes no slower than the static guess,
+and the per-stripe budgets hit their waste-reduction bar.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import tempfile
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import DynasparseEngine, SparseCOO
+from repro.core import calibrate
 from repro.core import dispatch as dispatch_mod
+from repro.core.perfmodel import runtime_fallback
 from repro.core.scheduler import execute_plan
 from repro.models import gnn
 from repro.serving import ServingConfig, ServingEngine, SharedPlanCache
@@ -176,6 +194,161 @@ def _sparse_activation(adj: SparseCOO, requests: int, max_batch: int,
     return out
 
 
+def _calibration(adj: SparseCOO, width: int = 16, repeats: int = 9) -> dict:
+    """Measured-model scenario (ISSUE 7 tentpole): calibrate the fallback
+    model on the live backend, compare the calibrated STQ/DTQ assignment's
+    compiled execute against the static-guess assignment on the SAME
+    kernel, and prove a restarted process replays zero measurements."""
+    rng = np.random.default_rng(1)
+    y = jnp.asarray(rng.normal(size=(adj.shape[0], width)).astype(np.float32))
+    base = runtime_fallback(compat.backend_kind())
+    cache = SharedPlanCache()
+    eng_static = DynasparseEngine(base, tile_m=32, tile_n=8, literal=True,
+                                  cache=cache, calibration="off")
+    eng_cal = DynasparseEngine(base, tile_m=32, tile_n=8, literal=True,
+                               cache=cache, calibration="auto")
+
+    n0 = calibrate.measurement_count()
+    t0 = time.perf_counter()
+    plan_s = eng_static.plan(adj, y, name="agg")
+    plan_c = eng_cal.plan(adj, y, name="agg")
+    plan_s_total = time.perf_counter() - t0
+    measured = calibrate.measurement_count() - n0
+    hw = eng_cal.runtime_hw()
+
+    def _timed(eng, plan):
+        z = eng.execute(plan, adj, y)          # warm the trace
+        np.asarray(z)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            z = eng.execute(plan, adj, y)
+            np.asarray(z)
+            best = min(best, time.perf_counter() - t0)
+        return best, z
+
+    static_s, z_s = _timed(eng_static, plan_s)
+    calib_s, z_c = _timed(eng_cal, plan_c)
+    ref = np.asarray(adj.todense()) @ np.asarray(y)
+    err = max(float(np.max(np.abs(np.asarray(z_s) - ref))),
+              float(np.max(np.abs(np.asarray(z_c) - ref))))
+
+    # simulated restart: a fresh cache loaded from the snapshot resolves
+    # the calibrated model without touching a single kernel
+    with tempfile.TemporaryDirectory() as td:
+        snap = os.path.join(td, "cache.pkl")
+        cache.save(snap)
+        fresh = SharedPlanCache()
+        fresh.load(snap)
+        n1 = calibrate.measurement_count()
+        eng_restart = DynasparseEngine(base, tile_m=32, tile_n=8,
+                                       literal=True, cache=fresh,
+                                       calibration="auto")
+        restored = eng_restart.runtime_hw()
+        re_measures = calibrate.measurement_count() - n1
+        replay = {
+            "re_measures_after_restart": re_measures,
+            "restart_calib_builds": fresh.stats.calib_builds,
+            "restart_calib_hits": fresh.stats.calib_hits,
+            "model_restored": bool(restored == hw),
+        }
+
+    return {
+        "backend": compat.backend_kind(),
+        "base_model": base.name,
+        "calibrated_model": hw.name,
+        # CI caches the snapshot file: warm runs legitimately measure 0
+        "snapshot_env_set": bool(os.environ.get(calibrate.SNAPSHOT_ENV)),
+        "measurements": measured,
+        "n_samples": hw.n_samples,
+        "fit_residual": hw.fit_residual,
+        "gemm_s_per_mac": hw.gemm_s_per_mac,
+        "spdmm_s_per_mac": hw.spdmm_s_per_mac,
+        "spmm_s_per_mac": hw.spmm_s_per_mac,
+        "dispatch_overhead_s": hw.dispatch_overhead,
+        "mem_bw_bytes_s": hw.mem_bw,
+        "roofline_bw_ratio": hw.roofline_bw_ratio,
+        "plan_and_calibrate_s": plan_s_total,
+        "static_n_stq": len(plan_s.stq),
+        "static_n_dtq": len(plan_s.dtq),
+        "calibrated_n_stq": len(plan_c.stq),
+        "calibrated_n_dtq": len(plan_c.dtq),
+        "assignment_differs": ([t.queue for t in plan_s.part.tasks]
+                               != [t.queue for t in plan_c.part.tasks]),
+        "static_execute_s": static_s,
+        "calibrated_execute_s": calib_s,
+        "max_abs_err_vs_reference": err,
+        "calib_builds": cache.stats.calib_builds,
+        "calib_hits": cache.stats.calib_hits,
+        **replay,
+    }
+
+
+def _per_stripe_budget(repeats: int = 4) -> dict:
+    """Skew-aware budget scenario (ISSUE 7 leg 2): one dense row-stripe,
+    the rest nearly empty.  The uniform budget pads every stripe to the
+    dense one's need; the per-stripe vector pays each stripe its own."""
+    rng = np.random.default_rng(7)
+    m, k, width = 96, 64, 16
+    x = np.zeros((m, k), np.float32)
+    x[:16] = rng.normal(size=(16, k)).astype(np.float32)
+    B = 8
+    nrb, ncb = (m - 16) // B, k // B
+    mask = np.kron((rng.uniform(size=(nrb, ncb)) < 0.06).astype(np.float32),
+                   np.ones((B, B)))
+    x[16:] = (rng.normal(size=(m - 16, k)) * mask).astype(np.float32)
+    y = rng.normal(size=(k, width)).astype(np.float32)
+
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True,
+                           cache=SharedPlanCache())
+    plan = eng.plan(x, jnp.asarray(y), name="act")
+    ad_u = eng.activation_dispatch_for(plan, x, per_stripe=False)
+    ad_v = eng.activation_dispatch_for(plan, x, per_stripe=True)
+    if ad_u is None or ad_v is None:
+        return {"skipped": "plan routed no sparse tasks"}
+    stats = eng.cache.stats
+
+    def _run(ad):
+        # warmup batch (x itself) then jittered batches: the single trace
+        # must serve all of them, budget never overflowing
+        tb0 = stats.trace_builds
+        z0, diag0 = dispatch_mod.execute_activation(
+            ad, x, y, interpret=True, stats=stats)
+        overflows = int(bool(diag0["overflow"]))
+        for keep in rng.uniform(size=(repeats, m, k)) < 0.9:
+            xi = (x * keep).astype(np.float32)
+            _, diag = dispatch_mod.execute_activation(
+                ad, xi, y, interpret=True, stats=stats)
+            overflows += int(bool(diag["overflow"]))
+        return np.asarray(z0), diag0, overflows, stats.trace_builds - tb0
+
+    z_u, diag_u, ovf_u, traces_u = _run(ad_u)
+    z_v, diag_v, ovf_v, traces_v = _run(ad_v)
+    z_eager = np.asarray(execute_plan(plan.part, plan.stq, plan.dtq,
+                                      x, y, batched=True, eps=eng.eps))
+
+    stored = int(diag_v["stored"])          # same warmup x on both routes
+    logical = int(diag_v["logical"])
+    cap_u, cap_v = int(diag_u["capacity"]), int(diag_v["capacity"])
+    waste_u = (cap_u - stored) / max(logical, 1)
+    waste_v = (cap_v - stored) / max(logical, 1)
+    return {
+        "uniform_slots": ad_u.geom.total_slots,
+        "per_stripe_slots": ad_v.geom.total_slots,
+        "budgets": list(map(int, ad_v.geom.cap_vec)),
+        "stored_blocks": stored,
+        "logical_blocks": logical,
+        "padded_waste_uniform": waste_u,
+        "padded_waste_per_stripe": waste_v,
+        "waste_reduction": 1.0 - waste_v / max(waste_u, 1e-12),
+        "overflows": ovf_u + ovf_v,
+        # one trace per route, every jittered batch replayed trace-free
+        "retraces": max(0, traces_u - 1) + max(0, traces_v - 1),
+        "bit_identical_to_eager": bool(
+            np.array_equal(z_u, z_eager) and np.array_equal(z_v, z_eager)),
+    }
+
+
 def run(requests: int = 48, max_batch: int = 8, model: str = "GCN",
         feat: int = 24, hidden: int = 16) -> dict:
     adj = _fixed_graph()
@@ -188,6 +361,8 @@ def run(requests: int = 48, max_batch: int = 8, model: str = "GCN",
             adj, requests, max_batch, model, feat, hidden),
         "sparse_activation": _sparse_activation(
             adj, requests, max_batch, model, feat, hidden),
+        "calibration": _calibration(adj),
+        "per_stripe_budget": _per_stripe_budget(),
     }
 
 
@@ -236,7 +411,34 @@ def main() -> None:
               and a["act_overflows"] == 0
               and a["replans"] == 0
               and a["compile_invalidations"] == 0
-              and a["trace_cache_hits"] >= a["compiled_batches"] - 1)
+              and a["trace_cache_hits"] >= a["compiled_batches"] - 1
+              # steady-state calls must CREDIT the cached act dispatches
+              and a["act_hits"] > 0)
+        # calibration (ISSUE 7 tentpole): the model was actually measured
+        # (unless replayed from a CI-cached snapshot), the calibrated
+        # assignment's compiled execute is no slower than the static guess,
+        # and a restarted process replays with ZERO re-measures
+        c = res["calibration"]
+        ok = (ok
+              and (c["measurements"] > 0 or c["snapshot_env_set"])
+              and c["max_abs_err_vs_reference"] < 1e-3
+              # noise guard: min-of-9 on a ~2 ms kernel still jitters
+              and c["calibrated_execute_s"]
+                  <= c["static_execute_s"] * 1.10 + 3e-4
+              and c["re_measures_after_restart"] == 0
+              and c["restart_calib_builds"] == 0
+              and c["restart_calib_hits"] == 1
+              and c["model_restored"])
+        # per-stripe budgets (ISSUE 7 leg 2): ≥20% less padded-slot waste
+        # than the uniform budget, overflow-free, retrace-free, bit-exact
+        p = res["per_stripe_budget"]
+        ok = (ok
+              and "skipped" not in p
+              and p["padded_waste_per_stripe"]
+                  <= 0.8 * p["padded_waste_uniform"]
+              and p["overflows"] == 0
+              and p["retraces"] == 0
+              and p["bit_identical_to_eager"])
         if not ok:
             raise SystemExit("[dispatch_bench] acceptance check FAILED")
         print("[dispatch_bench] acceptance check passed")

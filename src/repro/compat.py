@@ -9,12 +9,24 @@ The pinned CI environment runs jax 0.4.37, where:
 
 Everything SPMD in this repo goes through these two wrappers so the same
 code runs on 0.4.37 and on current jax without feature gates in the tests.
+``backend_kind`` is the compat-visible device-kind probe the calibration
+subsystem keys its measurements on.
 """
 from __future__ import annotations
 
 import jax
 
 _HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def backend_kind() -> str:
+    """The active jax backend kind ("cpu", "tpu", "gpu").
+
+    The calibration cache key's device-kind component: measurements taken on
+    one backend must never be replayed on another, and the fallback
+    ``HardwareModel`` for an uncalibrated engine is chosen from this value
+    (``repro.core.perfmodel.runtime_fallback``)."""
+    return jax.default_backend()
 
 
 def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:

@@ -439,14 +439,20 @@ def execute_dispatch(d: CompiledDispatch, x, y, *, interpret: bool,
 class ActivationGeometry(DispatchGeometry):
     """Hashable static shape of a compiled ACTIVATION dispatch.
 
-    Extends :class:`DispatchGeometry` with ``cap`` — the stored-block
-    budget per row-stripe — because the descriptor arrays enumerate capacity
-    slots, not concrete stored blocks: the trace key must distinguish two
-    budgets, but NOT two sparsity patterns (that independence is the whole
-    point).  Dataclass equality is class-aware, so an activation geometry
-    never collides with an adjacency one in the jit/trace registries.
+    Extends :class:`DispatchGeometry` with the stored-block budget per
+    row-stripe — because the descriptor arrays enumerate capacity slots,
+    not concrete stored blocks: the trace key must distinguish two budgets,
+    but NOT two sparsity patterns (that independence is the whole point).
+    The budget is either uniform (``cap``, historical layout) or a
+    per-stripe vector (``caps`` — skew-aware: each stripe only as many
+    slots as its warmup need × slack; stripes live at flat offsets
+    ``cumsum(caps)``).  Dataclass equality is class-aware, so an activation
+    geometry never collides with an adjacency one in the jit/trace
+    registries.
     """
     cap: int = 0
+    # per-stripe budgets; empty tuple = uniform ``cap`` for every stripe
+    caps: tuple = ()
 
     @property
     def R(self) -> int:
@@ -455,6 +461,24 @@ class ActivationGeometry(DispatchGeometry):
     @property
     def C(self) -> int:
         return self.SN // self.B
+
+    @property
+    def cap_vec(self) -> np.ndarray:
+        """Per-stripe budget vector (length ``nrt``), whichever form the
+        geometry stores."""
+        if self.caps:
+            return np.asarray(self.caps, dtype=np.int64)
+        return np.full(self.nrt, self.cap, dtype=np.int64)
+
+    @property
+    def slot_offsets(self) -> np.ndarray:
+        """Flat slot offset of each stripe (length ``nrt + 1``)."""
+        return np.concatenate(
+            [np.zeros(1, np.int64), np.cumsum(self.cap_vec)])
+
+    @property
+    def total_slots(self) -> int:
+        return int(self.cap_vec.sum())
 
 
 @dataclasses.dataclass
@@ -490,6 +514,22 @@ def activation_capacity(x, part, block: int, *, eps: float = 0.0,
     wiggles within the drift threshold still fit without a retrace.
     ``None`` when the canvas geometry cannot take the in-place index maps.
     """
+    needs = _stripe_needs(x, part, block, eps=eps)
+    if needs is None:
+        return None
+    R, C = _canvas_rc(part, block)
+    return min(R * C, max(1, math.ceil(int(needs.max()) * slack)))
+
+
+def _canvas_rc(part, block: int) -> tuple[int, int]:
+    SM, _ = canvas_slots(part, block)
+    return SM // block, -(-part.K // block)
+
+
+def _stripe_needs(x, part, block: int, *, eps: float = 0.0):
+    """Per-stripe slot needs of a warmup activation (stored blocks plus one
+    filler per empty block-row, canvas padding rows included) — the shared
+    counting core of the uniform and per-stripe budget sizers."""
     slots = canvas_slots(part, block)
     if slots is None:
         return None
@@ -501,33 +541,64 @@ def activation_capacity(x, part, block: int, *, eps: float = 0.0,
     xp[: x.shape[0], : x.shape[1]] = x
     xb = xp.reshape(S, R, B, C, B)
     mask = block_nonzero_mask(xb, eps, axis=(2, 4))
-    need = int(np.maximum(mask.sum(axis=2), 1).sum(axis=1).max())
-    return min(R * C, max(1, math.ceil(need * slack)))
+    return np.maximum(mask.sum(axis=2), 1).sum(axis=1)     # (S,)
 
 
-def build_activation_dispatch(part, stq, dtq, *, block: int, capacity: int,
+def activation_budgets(x, part, block: int, *, eps: float = 0.0,
+                       slack: float = 1.5):
+    """Per-stripe stored-block budget VECTOR from a warmup activation.
+
+    The skew-aware refinement of :func:`activation_capacity`: each stripe
+    is budgeted ``its own need × slack`` (clamped to ``[1, R*C]``) instead
+    of every stripe paying for the densest one.  On skewed activations this
+    cuts padded-slot waste proportionally to the skew, and since drift only
+    wiggles a fixed support, warmup needs bound later needs per stripe just
+    as they do globally.  Returns an int64 array of length
+    ``part.n_row_tiles``, or ``None`` when the canvas geometry cannot take
+    the in-place index maps.
+    """
+    needs = _stripe_needs(x, part, block, eps=eps)
+    if needs is None:
+        return None
+    R, C = _canvas_rc(part, block)
+    return np.clip(np.ceil(needs * slack).astype(np.int64), 1, R * C)
+
+
+def build_activation_dispatch(part, stq, dtq, *, block: int, capacity,
                               eps: float = 0.0, fingerprint: str = ""
                               ) -> ActivationDispatch | None:
     """Lower an activation-side plan into capacity-slot descriptor arrays.
 
-    Entry order is (task, slot) for SpDMM and (task, y-block-col, slot) for
-    SpMM: within one ordering unit the runtime slot metadata is row-major,
-    so every output block is still visited in ONE consecutive run (the
-    TPU output-residency obligation) for ANY stored pattern — and within a
-    run the real contributions arrive in the same (block-row, block-col)
-    order the eager host pack emits, so sums are bit-identical.  Returns
-    ``None`` for canvas geometries the in-place index maps cannot take.
+    ``capacity`` is a uniform int budget or a per-stripe vector (see
+    :func:`activation_budgets`); descriptors address slots at the stripe's
+    flat offset, so the uniform case keeps its historical
+    ``stripe * cap + slot`` layout exactly.  Entry order is (task, slot)
+    for SpDMM and (task, y-block-col, slot) for SpMM: within one ordering
+    unit the runtime slot metadata is row-major, so every output block is
+    still visited in ONE consecutive run (the TPU output-residency
+    obligation) for ANY stored pattern — and within a run the real
+    contributions arrive in the same (block-row, block-col) order the eager
+    host pack emits, so sums are bit-identical.  Returns ``None`` for
+    canvas geometries the in-place index maps cannot take.
     """
     slots = canvas_slots(part, block)
     if slots is None:
         return None
     SM, SN = slots
-    B, cap = block, capacity
+    B = block
     R, C = SM // B, SN // B
+    cap_arr = np.asarray(capacity, dtype=np.int64)
+    uniform = cap_arr.ndim == 0
+    if uniform:
+        cap_arr = np.full(part.n_row_tiles, int(cap_arr), dtype=np.int64)
+    assert cap_arr.shape == (part.n_row_tiles,), (cap_arr.shape, part)
+    offs = np.concatenate([np.zeros(1, np.int64), np.cumsum(cap_arr)])
     geom = ActivationGeometry(
         M=part.M, K=part.K, N=part.N, tm=part.tile_m, tn=part.tile_n,
         SM=SM, SN=SN, B=B, nrt=part.n_row_tiles, nct=part.n_col_tiles,
-        cap=cap, eps=eps,
+        cap=int(cap_arr[0]) if uniform else 0,
+        caps=() if uniform else tuple(int(c) for c in cap_arr),
+        eps=eps,
         has_gemm=bool(dtq),
         has_spdmm=any(t.primitive != "SpMM" for t in stq),
         has_spmm=any(t.primitive == "SpMM" for t in stq))
@@ -545,25 +616,26 @@ def build_activation_dispatch(part, stq, dtq, *, block: int, capacity: int,
                         key=lambda t: (t.i, t.j))
 
     if spdmm_tasks:
-        i_arr = np.array([t.i for t in spdmm_tasks], dtype=np.int64)
-        j_arr = np.array([t.j for t in spdmm_tasks], dtype=np.int64)
-        slot = np.tile(np.arange(cap, dtype=np.int64), len(spdmm_tasks))
-        arrays["asp_a_ids"] = jnp.asarray(
-            (np.repeat(i_arr * cap, cap) + slot).astype(np.int32))
-        arrays["asp_out_cols"] = jnp.asarray(
-            np.repeat(j_arr, cap).astype(np.int32))
-        arrays["asp_base_rows"] = jnp.asarray(
-            np.repeat(i_arr * R, cap).astype(np.int32))
+        arrays["asp_a_ids"] = jnp.asarray(np.concatenate(
+            [offs[t.i] + np.arange(cap_arr[t.i], dtype=np.int64)
+             for t in spdmm_tasks]).astype(np.int32))
+        arrays["asp_out_cols"] = jnp.asarray(np.concatenate(
+            [np.full(cap_arr[t.i], t.j, dtype=np.int64)
+             for t in spdmm_tasks]).astype(np.int32))
+        arrays["asp_base_rows"] = jnp.asarray(np.concatenate(
+            [np.full(cap_arr[t.i], t.i * R, dtype=np.int64)
+             for t in spdmm_tasks]).astype(np.int32))
 
     if spmm_tasks:
         a_ids, y_cols, base_rows = [], [], []
         for t in spmm_tasks:
             nbj = -(-part.col_extent(t.j) // B)
-            a_ids.append(np.tile(t.i * cap + np.arange(cap, dtype=np.int64),
-                                 nbj))
+            cap_i = int(cap_arr[t.i])
+            a_ids.append(np.tile(
+                offs[t.i] + np.arange(cap_i, dtype=np.int64), nbj))
             y_cols.append(np.repeat(t.j * C + np.arange(nbj, dtype=np.int64),
-                                    cap))
-            base_rows.append(np.full(nbj * cap, t.i * R, dtype=np.int64))
+                                    cap_i))
+            base_rows.append(np.full(nbj * cap_i, t.i * R, dtype=np.int64))
         arrays["amm_a_ids"] = jnp.asarray(
             np.concatenate(a_ids).astype(np.int32))
         # y block-col == output block-col for every triple of a task
@@ -594,7 +666,9 @@ def apply_activation_dispatch(geom: ActivationGeometry, arrays, x, y, *,
     (pool, row_m, col_m, first_m, nnzb, real,
      overflow) = ops.pack_activation_stripes(
         x, block=B, n_stripes=geom.nrt, slot_rows=geom.R,
-        n_block_cols=geom.ncb, capacity=geom.cap, eps=geom.eps)
+        n_block_cols=geom.ncb,
+        capacity=np.asarray(geom.caps) if geom.caps else geom.cap,
+        eps=geom.eps)
 
     def _dense():
         return ops.gemm(x, y, interpret=interpret, out_dtype=jnp.float32)
@@ -632,7 +706,7 @@ def apply_activation_dispatch(geom: ActivationGeometry, arrays, x, y, *,
     # a dense activation, ~1 for an all-zero one.
     diag = {
         "stored": jnp.sum(real),
-        "capacity": jnp.int32(geom.nrt * geom.cap),
+        "capacity": jnp.int32(geom.total_slots),
         "logical": jnp.int32(-(-geom.M // geom.B) * geom.ncb),
         "overflow": overflow,
     }

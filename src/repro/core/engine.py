@@ -103,8 +103,17 @@ class DynasparseEngine:
         cache: PlanCache | None = None,
         drift_threshold: float | None = None,
         sketch_rows: int = 256,
+        calibration: object = "auto",
     ):
         self.hw = hw
+        # "auto": hw models marked ``fallback=True`` are replaced for
+        # ANALYSIS by a measured CalibratedModel on first plan (lazy — the
+        # sweep runs once per process and persists through self.cache);
+        # "off": trust hw as given; a HardwareModel instance: use it.
+        # Analytical models (VCK5000 & friends) are never calibrated away —
+        # they reproduce the paper's tables by design.
+        self.calibration = calibration
+        self._hw_runtime: HardwareModel | None = None
         self.tile_m = tile_m
         self.tile_n = tile_n
         self.mode = mode
@@ -131,6 +140,27 @@ class DynasparseEngine:
         self.report = EngineReport()
 
     # ------------------------------------------------------------------
+    def runtime_hw(self) -> HardwareModel:
+        """The model the Analyzer/Scheduler actually consult.
+
+        Resolved once per engine: an explicit ``calibration`` model wins;
+        ``"auto"`` calibrates ``fallback=True`` models through
+        ``repro.core.calibrate`` (cache-first — a warm ``PlanCache`` or
+        ``$REPRO_CALIBRATION_PATH`` snapshot means zero measurements) and
+        leaves analytical models untouched; anything else keeps ``hw``.
+        """
+        if self._hw_runtime is None:
+            hw = self.hw
+            if isinstance(self.calibration, HardwareModel):
+                hw = self.calibration
+            elif self.calibration == "auto" and self.hw.fallback:
+                from repro.core import calibrate as _calibrate
+                hw = _calibrate.get_calibrated(
+                    self.cache, self.hw, block=self.block,
+                    interpret=self.interpret)
+            self._hw_runtime = hw
+        return self._hw_runtime
+
     def _geometry(self, M: int, N: int) -> tuple[int, int]:
         tm, tn = self.tile_m, self.tile_n
         if tm is None or tn is None:
@@ -155,12 +185,16 @@ class DynasparseEngine:
                 f"y is {tuple(y.shape)}")
         tm, tn = self._geometry(M, N)
 
+        hw = self.runtime_hw()
         struct_key = None
         plan_key = None
         if isinstance(x, SparseCOO):
             struct_key = (coo_fingerprint(x), tm, self.eps)
+            # keyed on the EFFECTIVE model's name: a calibrated name encodes
+            # (base, backend, block, dtype), so plans decided under the
+            # static guesses never shadow calibrated ones or vice versa
             plan_key = (struct_key, K, N, tn, self.mode, self.strategy,
-                        self.hw.name)
+                        hw.name)
             cached = self.cache.get_plan(plan_key)
             if cached is not None:
                 if self.drift_threshold is None:
@@ -195,16 +229,16 @@ class DynasparseEngine:
         # (2) task grid
         part = make_tasks(name, M, K, N, row_d, col_d, tm, tn)
 
-        # (3) analyzer
+        # (3) analyzer — on the effective (possibly calibrated) model
         if self.mode == "dynamic":
-            stq, dtq = _analyzer.analyze_kernel(part, self.hw, self.strategy)
+            stq, dtq = _analyzer.analyze_kernel(part, hw, self.strategy)
         elif self.mode == "sparse_only":
-            stq, dtq = _analyzer.force_queue(part, self.hw, "STQ")
+            stq, dtq = _analyzer.force_queue(part, hw, "STQ")
         else:
-            stq, dtq = _analyzer.force_queue(part, self.hw, "DTQ")
+            stq, dtq = _analyzer.force_queue(part, hw, "DTQ")
 
         # (4) scheduler simulation → hardware-time estimate
-        rep = _scheduler.simulate(stq, dtq, self.hw)
+        rep = _scheduler.simulate(stq, dtq, hw)
         plan = KernelPlan(part=part, stq=stq, dtq=dtq, report=rep,
                           row_density=np.asarray(row_d),
                           col_density=np.asarray(col_d),
@@ -276,8 +310,9 @@ class DynasparseEngine:
                 block=self.block, eps=self.eps, fingerprint=digest))
 
     def activation_dispatch_for(
-            self, plan: KernelPlan, x, *, capacity: int | None = None,
-            slack: float = 1.5) -> "_dispatch.ActivationDispatch | None":
+            self, plan: KernelPlan, x, *, capacity=None,
+            slack: float = 1.5,
+            per_stripe: bool = True) -> "_dispatch.ActivationDispatch | None":
         """The plan's :class:`ActivationDispatch` — the capacity-padded
         block-skip route for a dense (activation-side) X — or ``None`` when
         the kernel should stay dense: non-literal/non-batched engines,
@@ -285,24 +320,34 @@ class DynasparseEngine:
         routed every task to the dense engine (dense wins — a plain GEMM is
         the whole kernel), or canvas-misaligned geometry.
 
-        ``capacity`` fixes the per-stripe stored-block budget; by default it
-        is measured from ``x`` (the warmup activation) with ``slack``
-        headroom.  Descriptors are content-INDEPENDENT — cached on the plan
-        digest (geometry + ordered assignment) and the budget, so every
-        activation kernel with the same shape and task split shares one
-        lowering and one trace."""
+        ``capacity`` fixes the stored-block budget (an int for a uniform
+        budget, or a per-stripe vector); by default it is measured from
+        ``x`` (the warmup activation) with ``slack`` headroom —
+        ``per_stripe=True`` sizes each stripe from ITS OWN warmup need
+        (``dispatch.activation_budgets``), cutting padded-slot waste on
+        skewed activations; ``per_stripe=False`` keeps the uniform
+        max-need budget.  Descriptors are content-INDEPENDENT — cached on
+        the plan digest (geometry + ordered assignment) and the budget, so
+        every activation kernel with the same shape and task split shares
+        one lowering and one trace."""
         if not (self.literal and self.batched):
             return None
         if isinstance(x, SparseCOO) or not plan.stq:
             return None
         if capacity is None:
-            capacity = _dispatch.activation_capacity(
-                x, plan.part, self.block, eps=self.eps, slack=slack)
+            if per_stripe:
+                capacity = _dispatch.activation_budgets(
+                    x, plan.part, self.block, eps=self.eps, slack=slack)
+            else:
+                capacity = _dispatch.activation_capacity(
+                    x, plan.part, self.block, eps=self.eps, slack=slack)
             if capacity is None:
                 return None
+        cap_key = (tuple(int(c) for c in np.asarray(capacity).ravel())
+                   if np.ndim(capacity) else int(capacity))
         digest = _dispatch.plan_digest(plan, self.block)
         return self.cache.activation_dispatch(
-            (digest, capacity, self.eps),
+            (digest, cap_key, self.eps),
             lambda: _dispatch.build_activation_dispatch(
                 plan.part, plan.stq, plan.dtq, block=self.block,
                 capacity=capacity, eps=self.eps, fingerprint=digest))

@@ -9,7 +9,14 @@ Two parameter sets ship:
   (MXU 197 TFLOP/s bf16 dense path; the sparse path skips zero *blocks*, so
   its α is block density and its per-MAC rate is the MXU rate discounted by a
   per-block dispatch overhead).  Used by the runtime to choose dense vs
-  sparse dispatch on TPU.
+  sparse dispatch on TPU.  **These constants are UNCALIBRATED fallback
+  defaults** — the 0.85/0.70 block-skip efficiencies and the ~100 ns
+  dispatch bubble are hand-tuned guesses, which is why the model is marked
+  ``fallback=True``: engines constructed with it route through
+  ``repro.core.calibrate`` on first plan (when calibration is enabled) so
+  STQ/DTQ decisions track measured kernel timings on the backend
+  ``repro.compat.backend_kind()`` reports, not the guesses.  ``VCK5000``
+  stays analytical by design — it reproduces the paper's tables.
 
 Closed forms (Table I):
     t_AIE   = m·n·d / (f_AIE · N_AIE · β)
@@ -44,6 +51,12 @@ class HardwareModel:
     dispatch_overhead: float = 0.0
     # TPU block-skip granularity (element-level on VCK5000 → block=1)
     skip_block: int = 1
+    # provenance: ``fallback=True`` marks hand-tuned guess constants that a
+    # runtime engine should replace with a measured ``CalibratedModel``
+    # (repro.core.calibrate) when calibration is available; ``calibrated``
+    # is set by the calibration subsystem on fitted models.
+    fallback: bool = False
+    calibrated: bool = False
 
 
 # 32 AIE computation cores x 4 tiles = 128 tiles; beta = 8 MACs/cycle (fp32)
@@ -70,6 +83,12 @@ VCK5000_384 = dataclasses.replace(
 # path is the block-skip Pallas kernel: same MXU rate on stored blocks, α is
 # block density, and each stored block pays a dispatch bubble (~100 ns:
 # scalar-prefetch DMA issue + grid step overheads).
+#
+# UNCALIBRATED FALLBACK: the 0.85/0.70 efficiency discounts and the 1e-7 s
+# dispatch overhead were never measured — they are plausibility guesses.
+# ``fallback=True`` routes engines built on this model through the
+# calibration subsystem (repro.core.calibrate) so the Analyzer's STQ/DTQ
+# mapping follows measured Pallas kernel timings wherever possible.
 TPUV5E = HardwareModel(
     name="TPUv5e",
     f_dense=940e6,
@@ -82,7 +101,22 @@ TPUV5E = HardwareModel(
     bytes_per_elem=2,
     dispatch_overhead=1e-7,
     skip_block=128,
+    fallback=True,
 )
+
+
+def runtime_fallback(backend: str) -> HardwareModel:
+    """Uncalibrated fallback model for a jax backend kind (the value
+    ``repro.compat.backend_kind()`` reports: "tpu", "cpu", "gpu", ...).
+
+    Every returned model carries ``fallback=True`` — the constants are
+    starting guesses the calibration subsystem is expected to replace.  The
+    non-TPU entries reuse the TPU closed forms with the name rebound so a
+    ``CalibratedModel`` fitted on that backend is attributed honestly.
+    """
+    if backend == "tpu":
+        return TPUV5E
+    return dataclasses.replace(TPUV5E, name=f"{backend}-fallback")
 
 
 @dataclasses.dataclass(frozen=True)

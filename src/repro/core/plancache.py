@@ -158,6 +158,11 @@ class CacheStats:
     # every activation kernel with the same geometry/assignment/budget.
     act_builds: int = 0         # plan -> ActivationDispatch lowerings
     act_hits: int = 0           # kernels served from a cached act dispatch
+    # measured performance model (repro.core.calibrate): one microbenchmark
+    # sweep per (device kind, block, dtype), persisted so a restarted
+    # process replays ZERO measurements.
+    calib_builds: int = 0       # CalibratedModel fits (compute() ran)
+    calib_hits: int = 0         # models served from a cached calibration
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -209,6 +214,7 @@ class PlanCache:
     # entry-kind prefixes of the unified store
     _PLAN, _DENSITY, _STRUCT, _DISPATCH = "plan", "density", "struct", "dispatch"
     _ACT = "actdispatch"
+    _CALIB = "calib"
 
     def __init__(self, capacity: int = 256, max_bytes: int | None = None):
         self.capacity = capacity
@@ -371,6 +377,28 @@ class PlanCache:
     def activation_count(self) -> int:
         """Number of cached activation-dispatch entries."""
         return sum(1 for (kind, _k) in self._entries if kind == self._ACT)
+
+    # --------------------------------------------------- calibration level
+    def calibration(self, key: tuple, compute: Callable[[], object]):
+        """Get-or-compute a measured performance model
+        (:class:`repro.core.calibrate.CalibratedModel`).  Keyed on
+        (device kind, block, dtype[, base model]) — microbenchmark sweeps
+        are the most expensive entry kind per byte, and a SharedPlanCache
+        snapshot persists them so a restarted process replays zero
+        measurements (``calib_builds == 0`` after load)."""
+        m = self._get(self._CALIB, key)
+        if m is not None:
+            self.stats.calib_hits += 1
+            return m
+        m = compute()
+        if m is not None:
+            self.stats.calib_builds += 1
+            self._put(self._CALIB, key, m)
+        return m
+
+    def calibration_count(self) -> int:
+        """Number of cached calibration entries."""
+        return sum(1 for (kind, _k) in self._entries if kind == self._CALIB)
 
     def clear(self) -> None:
         self._entries.clear()

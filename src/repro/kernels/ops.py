@@ -166,16 +166,20 @@ def blockize(y, block: int):
 
 
 def pack_activation_stripes(x, *, block: int, n_stripes: int, slot_rows: int,
-                            n_block_cols: int, capacity: int,
+                            n_block_cols: int, capacity,
                             eps: float = 0.0):
     """Traceable capacity-padded BlockCSR packing of a dense activation.
 
     The device-resident analogue of per-row-stripe :func:`pack_blockcsr` —
     runs INSIDE a jitted program (no host round-trip), with **fixed shapes**
     so one trace serves any activation sparsity within the stored-block
-    budget.  ``x`` is the dense ``(M, K)`` operand; each of the
-    ``n_stripes`` canvas row-stripes (``slot_rows`` block-rows tall) is
-    packed into exactly ``capacity`` block slots:
+    budget.  ``x`` is the dense ``(M, K)`` operand; ``capacity`` is either a
+    static int (every stripe gets the same budget) or a static per-stripe
+    vector of ``n_stripes`` ints (skew-aware budgets — stripes packed back
+    to back at flat offsets ``cumsum(capacity)``, so the trace shape depends
+    only on the TOTAL slot count).  Each of the ``n_stripes`` canvas
+    row-stripes (``slot_rows`` block-rows tall) is packed into exactly its
+    budgeted number of block slots:
 
     - stored blocks (any ``|elem| > eps``; ``!= 0`` when ``eps == 0``) fill
       slots in row-major (block-row, block-col) order — the same order
@@ -187,15 +191,22 @@ def pack_activation_stripes(x, *, block: int, n_stripes: int, slot_rows: int,
       the LAST block-row, column 0, ``first = 0`` — exact bitwise no-ops.
 
     Returns ``(blocks, row_ids, col_ids, first, nnzb, real, overflow)``:
-    the pooled ``(n_stripes * capacity, B, B)`` slot payloads, the flat
-    per-slot metadata (int32, indexable by ``stripe * capacity + slot``),
-    the per-stripe SLOT counts (stored blocks + empty-row fillers — what
-    the budget must cover), the per-stripe count of REAL stored blocks
-    (fillers excluded — the honest skip telemetry), and a scalar bool that
-    is True when ANY stripe needs more than ``capacity`` slots (blocks past
-    the budget are dropped — the caller must take its dense fallback).
+    the pooled ``(sum(capacity), B, B)`` slot payloads, the flat per-slot
+    metadata (int32, indexable by ``offset[stripe] + slot`` — with a scalar
+    capacity that is the familiar ``stripe * capacity + slot``), the
+    per-stripe SLOT counts (stored blocks + empty-row fillers — what the
+    budget must cover), the per-stripe count of REAL stored blocks (fillers
+    excluded — the honest skip telemetry), and a scalar bool that is True
+    when ANY stripe needs more than its budgeted slots (blocks past the
+    budget are dropped — the caller must take its dense fallback).
     """
     B, S, R, C = block, n_stripes, slot_rows, n_block_cols
+    caps = np.asarray(capacity, dtype=np.int64)
+    if caps.ndim == 0:
+        caps = np.full(S, int(caps), dtype=np.int64)
+    assert caps.shape == (S,), (caps.shape, S)
+    offs = np.concatenate([np.zeros(1, np.int64), np.cumsum(caps)])
+    total = int(offs[-1])
     x = jnp.asarray(x)
     M, K = x.shape
     xp = jnp.pad(x, ((0, S * R * B - M), (0, C * B - K)))
@@ -216,22 +227,25 @@ def pack_activation_stripes(x, *, block: int, n_stripes: int, slot_rows: int,
                        jnp.zeros((), x.dtype)).reshape(S, R * C, B, B)
     r_idx = jax.lax.broadcasted_iota(jnp.int32, (S, R, C), 1).reshape(S, R * C)
     c_idx = jax.lax.broadcasted_iota(jnp.int32, (S, R, C), 2).reshape(S, R * C)
-    s_idx = jax.lax.broadcasted_iota(jnp.int32, (S, R * C), 0)
-    # scatter each stored block to its slot; non-stored and over-budget
-    # blocks target slot == capacity, which 'drop' discards
-    tgt = jnp.where(flat & (slot < capacity), slot, capacity)
-    pool = jnp.zeros((S, capacity, B, B), x.dtype
-                     ).at[s_idx, tgt].set(blocks, mode="drop")
-    row_ids = jnp.full((S, capacity), R - 1, jnp.int32
-                       ).at[s_idx, tgt].set(r_idx, mode="drop")
-    col_ids = jnp.zeros((S, capacity), jnp.int32
-                        ).at[s_idx, tgt].set(c_idx, mode="drop")
-    first_f = jnp.zeros((S, capacity), jnp.int32).at[s_idx, tgt].set(
-        first.reshape(S, R * C).astype(jnp.int32), mode="drop")
-    return (pool.reshape(S * capacity, B, B), row_ids.reshape(-1),
-            col_ids.reshape(-1), first_f.reshape(-1), nnzb,
+    # scatter each stored block to its flat slot ``offset[stripe] + slot``;
+    # non-stored and over-budget blocks target slot == total, which 'drop'
+    # discards.  With a scalar capacity the offsets are ``stripe * cap`` and
+    # the layout is bit-identical to the historical 2-D (S, cap) scatter.
+    caps_j = jnp.asarray(caps, jnp.int32)[:, None]        # (S, 1), static
+    offs_j = jnp.asarray(offs[:-1], jnp.int32)[:, None]
+    tgt = jnp.where(flat & (slot < caps_j), offs_j + slot, total).reshape(-1)
+    pool = jnp.zeros((total, B, B), x.dtype
+                     ).at[tgt].set(blocks.reshape(S * R * C, B, B),
+                                   mode="drop")
+    row_ids = jnp.full((total,), R - 1, jnp.int32
+                       ).at[tgt].set(r_idx.reshape(-1), mode="drop")
+    col_ids = jnp.zeros((total,), jnp.int32
+                        ).at[tgt].set(c_idx.reshape(-1), mode="drop")
+    first_f = jnp.zeros((total,), jnp.int32).at[tgt].set(
+        first.reshape(-1).astype(jnp.int32), mode="drop")
+    return (pool, row_ids, col_ids, first_f, nnzb,
             jnp.sum(mask.astype(jnp.int32), axis=(1, 2)),
-            jnp.any(nnzb > capacity))
+            jnp.any(nnzb > jnp.asarray(caps, jnp.int32)))
 
 
 def spmm(a: BlockCSR, y: BlockCSR, *, interpret: bool | None = None,

@@ -229,6 +229,15 @@ def hlo_cost(hlo: str) -> dict:
     return {"flops": flops, "bytes": bytes_acc, "collectives": coll}
 
 
+def lowered_cost(fn, *args) -> dict:
+    """Lower + compile a jit-wrapped callable and run :func:`hlo_cost` on
+    the optimized HLO text.  The bridge between this module's static cost
+    machinery and the measured runtime path: ``repro.core.calibrate`` uses
+    it to cross-check its fitted memory bandwidth against the HLO-implied
+    traffic of a reference GEMM (``CalibratedModel.roofline_bw_ratio``)."""
+    return hlo_cost(fn.lower(*args).compile().as_text())
+
+
 def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
                    coll_bytes_per_chip: float, n_chips: int) -> dict:
     """All inputs are PER-CHIP: ``compiled.cost_analysis()`` and

@@ -191,13 +191,20 @@ class CompiledModel:
             else:
                 self.stats.trace_cache_hits += 1
             self.stats.plan_hits += self.n_sparse
+            # a compiled call equally replays the cached ActivationDispatch
+            # descriptors of its block-skip kernels — credit act_hits so the
+            # steady-state hit rate reflects that reuse (the builds happened
+            # at warmup; without this the counter read "2 builds, 0 hits"
+            # forever while every batch reused them)
+            self.stats.act_hits += self.n_act
         logits, self.last_activation = self.run(self.payload, h)
         return logits
 
 
 def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
                   *, transport=None, activation_skip: bool = True,
-                  activation_slack: float = 1.5):
+                  activation_slack: float = 1.5,
+                  activation_per_stripe: bool = True):
     """Fuse all layer kernels of (model, graph, feature shape) into a single
     jitted program; returns ``(warmup logits, CompiledModel | None)``.
 
@@ -214,7 +221,9 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
     block-skip route (:class:`~repro.core.dispatch.ActivationDispatch` —
     zero blocks of the intermediate features are skipped with FIXED shapes,
     budgeted at ``activation_slack`` headroom over the warmup's stored
-    blocks; a batch that overflows the budget falls back to a dense GEMM
+    blocks — per stripe when ``activation_per_stripe`` (default), so skewed
+    activations don't pad every stripe to the densest one's need; a batch
+    that overflows the budget falls back to a dense GEMM
     inside the same program, never a retrace).  When the Analyzer sent
     everything to the dense engine — dense activations win — the kernel
     stays one dense Pallas GEMM.  ``activation_skip=False`` forces the
@@ -250,7 +259,8 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
                 payload.append({"arrays": dict(d.arrays), "xd": xd})
         else:
             ad = (engine.activation_dispatch_for(
-                      engine.last_plan, x, slack=activation_slack)
+                      engine.last_plan, x, slack=activation_slack,
+                      per_stripe=activation_per_stripe)
                   if activation_skip else None)
             if ad is None:
                 records.append(("gemm", None))

@@ -36,7 +36,10 @@ from repro.core.plancache import coo_fingerprint
 # v2: DispatchGeometry grew the static ``eps`` field and the activation-
 # dispatch entry kind was added — v1 snapshots would restore geometry
 # objects missing attributes, so they are rejected instead of resurrected.
-_PERSIST_VERSION = 2
+# v3: ActivationGeometry grew the per-stripe ``caps`` budget field and the
+# calibration entry kind (``CalibratedModel`` measurements) was added —
+# same rejection rationale for v2 snapshots.
+_PERSIST_VERSION = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +157,14 @@ class SharedPlanCache(PlanCache):
     def activation_count(self):
         with self._lock:
             return super().activation_count()
+
+    def calibration(self, key, compute):
+        with self._lock:
+            return super().calibration(key, compute)
+
+    def calibration_count(self):
+        with self._lock:
+            return super().calibration_count()
 
     def purge_fingerprint(self, fingerprint):
         with self._lock:

@@ -90,6 +90,10 @@ class ServingConfig:
     # every activation kernel is one dense Pallas GEMM (PR-4 behaviour).
     activation_skip: bool = True
     activation_slack: float = 1.5
+    # per-stripe capacity budgets (each stripe sized from its own warmup
+    # need × slack) instead of one uniform max-need budget — cuts padded-
+    # slot waste on skewed activations; off restores the uniform budget.
+    activation_per_stripe: bool = True
 
 
 @dataclasses.dataclass
@@ -286,6 +290,8 @@ class ServingEngine:
             "dispatch_hits": s.dispatch_hits,
             "act_builds": s.act_builds,
             "act_hits": s.act_hits,
+            "calib_builds": s.calib_builds,
+            "calib_hits": s.calib_hits,
             "trace_builds": s.trace_builds,
             "trace_cache_hits": s.trace_cache_hits,
             "replans": s.replans,
@@ -411,6 +417,9 @@ class ServingEngine:
         not silently undercount the stats."""
         t1 = time.perf_counter()
         self.stats.batches += 1
+        # record EVERY request before resolving ANY future: gather() raises
+        # on the first exception, so a caller can observe stats the moment
+        # one future fails — interleaving would undercount the batch
         for r in batch:
             r.stats.batch_size = len(batch)
             r.stats.t_queue = t0 - r.t_enqueue
@@ -418,6 +427,7 @@ class ServingEngine:
             r.stats.latency = t1 - r.t_enqueue
             r.stats.error = f"{type(exc).__name__}: {exc}"
             self.stats.requests.append(r.stats)
+        for r in batch:
             self._resolve(r.future, exc=exc)
 
     def _dispatch(self, graph_id: str, batch: list[_Request]) -> None:
@@ -480,7 +490,9 @@ class ServingEngine:
                         self.model, self.engine, adj, h, self.params,
                         transport=stacked_transport,
                         activation_skip=self.config.activation_skip,
-                        activation_slack=self.config.activation_slack)
+                        activation_slack=self.config.activation_slack,
+                        activation_per_stripe=(
+                            self.config.activation_per_stripe))
                     if built is not None:
                         self._compiled[cm_key] = built
                         while len(self._compiled) > self.config.max_compiled:

@@ -297,6 +297,9 @@ def test_serving_steady_state_reports_skip_telemetry():
     assert srv.stats.compiled_batches == srv.stats.batches - 1
     assert ds["replans"] == 0
     assert ds["act_kernels_last"] >= 1
+    # steady-state compiled batches replay the cached activation
+    # dispatches — the hit counter must reflect that reuse
+    assert ds["act_hits"] > 0
     assert ds["act_overflows"] == 0
     assert ds["act_skipped_ratio_mean"] > 0.0
     assert len(srv.stats.activation_batches) == srv.stats.compiled_batches
@@ -343,6 +346,124 @@ def _pack_blockcsr_loop(x, block, *, capacity=None, eps=0.0):
                     jnp.asarray(cols, dtype=jnp.int32),
                     jnp.asarray(first, dtype=jnp.int32),
                     jnp.asarray(np.stack(blocks)), nnzb)
+
+
+# ------------------------------------------- per-stripe capacity budgets
+def _skewed_activation(rng, m=96, k=64, block=8):
+    """One dense row-stripe, the rest nearly empty — the skew case where a
+    uniform budget pads every stripe to the dense stripe's need."""
+    x = np.zeros((m, k), np.float32)
+    x[:16] = rng.normal(size=(16, k)).astype(np.float32)
+    tail = _block_sparse(rng, m - 16, k, 0.06, block=block)
+    x[16:] = tail
+    return x
+
+
+def test_pack_vector_capacity_uniform_is_bit_identical():
+    """A per-stripe vector with every entry equal to the scalar budget must
+    reproduce the historical uniform layout bit-for-bit."""
+    rng = np.random.default_rng(51)
+    x = _block_sparse(rng, 64, 32, 0.3)
+    kw = dict(block=8, n_stripes=4, slot_rows=2, n_block_cols=4, eps=0.0)
+    out_s = ops.pack_activation_stripes(x, capacity=5, **kw)
+    out_v = ops.pack_activation_stripes(
+        x, capacity=np.full(4, 5, np.int64), **kw)
+    for a, b in zip(out_s, out_v):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_vector_capacity_trims_and_detects_overflow():
+    rng = np.random.default_rng(53)
+    x = _skewed_activation(rng)
+    kw = dict(block=8, n_stripes=6, slot_rows=2, n_block_cols=8, eps=0.0)
+    *_, nnzb, _real, ovf = ops.pack_activation_stripes(x, capacity=16, **kw)
+    needs = np.asarray(nnzb)
+    assert not bool(ovf)
+    # exact per-stripe budgets: packed pool shrinks to sum(needs), no loss
+    out = ops.pack_activation_stripes(x, capacity=needs, **kw)
+    assert out[0].shape[0] == int(needs.sum()) < 6 * 16
+    assert not bool(out[-1])
+    # starving ONE stripe below its need must raise the overflow flag
+    starved = needs.copy()
+    starved[0] -= 1
+    assert bool(ops.pack_activation_stripes(x, capacity=starved, **kw)[-1])
+
+
+def test_per_stripe_budgets_cut_waste_bit_identically():
+    """Acceptance (ISSUE 7 leg 2): on a skewed activation the per-stripe
+    budget vector drops padded-slot waste ≥20% vs the uniform budget, with
+    zero overflows and the identical (bitwise) compiled result."""
+    rng = np.random.default_rng(57)
+    xd = _skewed_activation(rng)
+    yd = rng.normal(size=(64, 16)).astype(np.float32)
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True)
+    plan = eng.plan(xd, jnp.asarray(yd))
+    ad_u = eng.activation_dispatch_for(plan, xd, per_stripe=False)
+    ad_v = eng.activation_dispatch_for(plan, xd, per_stripe=True)
+    if ad_u is None:
+        pytest.skip("plan routed no sparse tasks")
+    assert ad_u.geom.caps == () and ad_v.geom.caps != ()
+    assert ad_v.geom.total_slots < ad_u.geom.total_slots
+
+    z_u, diag_u = dispatch_mod.execute_activation(ad_u, xd, yd,
+                                                  interpret=True)
+    z_v, diag_v = dispatch_mod.execute_activation(ad_v, xd, yd,
+                                                  interpret=True)
+    assert not bool(diag_u["overflow"]) and not bool(diag_v["overflow"])
+    np.testing.assert_array_equal(np.asarray(z_u), np.asarray(z_v))
+    z_b = execute_plan(plan.part, plan.stq, plan.dtq, xd, yd,
+                       batched=True, eps=eng.eps)
+    np.testing.assert_array_equal(np.asarray(z_v), np.asarray(z_b))
+
+    stored = int(diag_v["stored"])
+    waste_u = (int(diag_u["capacity"]) - stored) / max(stored, 1)
+    waste_v = (int(diag_v["capacity"]) - stored) / max(stored, 1)
+    assert waste_v <= 0.8 * waste_u, (waste_u, waste_v)
+
+
+def test_per_stripe_budget_serves_jitter_without_overflow():
+    """Jitter only removes elements from the warmup support, so each
+    stripe's need can only shrink: the warmup-sized budget vector serves
+    every jittered batch with zero overflows (and one shared descriptor
+    build)."""
+    rng = np.random.default_rng(59)
+    xd = _skewed_activation(rng)
+    yd = rng.normal(size=(64, 16)).astype(np.float32)
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True)
+    plan = eng.plan(xd, jnp.asarray(yd))
+    ad = eng.activation_dispatch_for(plan, xd, per_stripe=True)
+    if ad is None:
+        pytest.skip("plan routed no sparse tasks")
+    builds0 = eng.cache.stats.act_builds
+    for i in range(4):
+        xi = (xd * (rng.uniform(size=xd.shape) < 0.9)).astype(np.float32)
+        z, diag = dispatch_mod.execute_activation(ad, xi, yd, interpret=True)
+        assert not bool(diag["overflow"]), i
+        z_b = execute_plan(plan.part, plan.stq, plan.dtq, xi, yd,
+                           batched=True, eps=eng.eps)
+        np.testing.assert_array_equal(np.asarray(z), np.asarray(z_b))
+        # same dispatch replayed — no rebuilds per batch
+        assert eng.cache.stats.act_builds == builds0
+
+
+# ------------------------------------------- steady-state act_hits credit
+def test_compiled_model_credits_act_hits():
+    """Regression (ISSUE 7 satellite): compiled steady-state calls replay
+    the cached activation dispatches, so ``act_hits`` must grow past
+    warmup — BENCH_dispatch.json used to read ``act_builds: 2, act_hits:
+    0`` across 6 batches while every batch reused them."""
+    rng = np.random.default_rng(61)
+    adj = _block_sparse_graph(rng)
+    h = _block_sparse(rng, 80, 12, 0.35)
+    params = gnn.init_params("GCN", 12, 8, 5)
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True)
+    _, cm = gnn.compile_model("GCN", eng, adj, jnp.asarray(h), params)
+    assert cm is not None and cm.n_act >= 1
+    hits0 = eng.cache.stats.act_hits
+    cm(jnp.asarray(h))
+    cm(jnp.asarray(h))
+    assert eng.cache.stats.act_hits == hits0 + 2 * cm.n_act
+    assert eng.cache.stats.act_hits > 0
 
 
 @pytest.mark.parametrize("seed", range(6))
