@@ -160,6 +160,12 @@ def plan_digest(plan, block: int) -> str:
                    part.tile_m, part.tile_n, block)).encode())
     h.update(repr([(t.i, t.j, t.primitive) for t in plan.stq]).encode())
     h.update(repr([(t.i, t.j) for t in plan.dtq]).encode())
+    placement = getattr(plan, "placement", None)
+    if placement is not None:
+        # Mesh geometry is part of a sharded dispatch's identity; unsharded
+        # plans hash exactly as before so existing digests stay stable.
+        h.update(repr(("mesh", placement.n_devices,
+                       placement.band_starts)).encode())
     digest = h.hexdigest()
     try:
         plan._dispatch_digest = (block, digest)

@@ -34,6 +34,7 @@ from repro.core import analyzer as _analyzer
 from repro.core import dispatch as _dispatch
 from repro.core import primitives as prim
 from repro.core import scheduler as _scheduler
+from repro.core import shard_exec as _shard_exec
 from repro.core import sparsity
 from repro.kernels import ops as _ops
 from repro.core.partition import choose_tile, make_tasks
@@ -85,6 +86,22 @@ class EngineReport:
             kernels=[(name, rep.scaled(s)) for name, rep in self.kernels],
             meta=list(self.meta))
 
+    @property
+    def by_device(self) -> list[_scheduler.ScheduleReport]:
+        """Per-device totals of a (possibly) sharded run — one merged
+        :class:`ScheduleReport` per mesh device, so heterogeneous device
+        times are not silently summed into one scalar.  Kernels without a
+        per-device breakdown (unsharded plans) are attributed to device 0;
+        an unsharded run therefore returns ``[self.total]``."""
+        out: list[_scheduler.ScheduleReport] = []
+        for _, rep in self.kernels:
+            per = list(rep.per_device) if rep.per_device else [rep]
+            while len(out) < len(per):
+                out.append(_scheduler.ScheduleReport.zero())
+            for d, r in enumerate(per):
+                out[d] = out[d].merge(r)
+        return out
+
 
 class DynasparseEngine:
     def __init__(
@@ -104,8 +121,21 @@ class DynasparseEngine:
         drift_threshold: float | None = None,
         sketch_rows: int = 256,
         calibration: object = "auto",
+        mesh: object = None,
     ):
         self.hw = hw
+        # 1-D ("data",) jax mesh → sharded plan/compile/execute: the
+        # Analyzer's STQ/DTQ split becomes a two-level (device, queue)
+        # placement and compiled kernels run under shard_map, one banded
+        # program per device.  None = classic single-device engine (and a
+        # size-1 mesh is the degenerate case of the SAME sharded path).
+        if mesh is not None:
+            names = tuple(getattr(mesh, "axis_names", ()))
+            if names != ("data",):
+                raise ValueError(
+                    f"DynasparseEngine mesh must be 1-D with axis ('data',), "
+                    f"got axes {names!r}")
+        self.mesh = mesh
         # "auto": hw models marked ``fallback=True`` are replaced for
         # ANALYSIS by a measured CalibratedModel on first plan (lazy — the
         # sweep runs once per process and persists through self.cache);
@@ -133,6 +163,11 @@ class DynasparseEngine:
         # whole-model compiler (models.gnn.compile_model) record each
         # kernel's plan without re-entering the cache/sketch machinery
         self.last_plan: KernelPlan | None = None
+
+    @property
+    def n_devices(self) -> int:
+        """Mesh size (1 for classic single-device engines)."""
+        return 1 if self.mesh is None else int(np.prod(self.mesh.devices.shape))
 
     def reset(self) -> None:
         """Clear the accumulated report.  The plan cache survives — it is
@@ -195,6 +230,11 @@ class DynasparseEngine:
             # static guesses never shadow calibrated ones or vice versa
             plan_key = (struct_key, K, N, tn, self.mode, self.strategy,
                         hw.name)
+            if self.mesh is not None:
+                # mesh geometry is part of a placed plan's identity; classic
+                # engines keep the historical key shape so their cached plans
+                # are untouched by the sharding layer
+                plan_key = plan_key + (("mesh", self.n_devices),)
             cached = self.cache.get_plan(plan_key)
             if cached is not None:
                 if self.drift_threshold is None:
@@ -229,20 +269,27 @@ class DynasparseEngine:
         # (2) task grid
         part = make_tasks(name, M, K, N, row_d, col_d, tm, tn)
 
-        # (3) analyzer — on the effective (possibly calibrated) model
-        if self.mode == "dynamic":
-            stq, dtq = _analyzer.analyze_kernel(part, hw, self.strategy)
-        elif self.mode == "sparse_only":
-            stq, dtq = _analyzer.force_queue(part, hw, "STQ")
+        # (3) analyzer — on the effective (possibly calibrated) model; mesh
+        # engines additionally place contiguous stripe bands onto devices
+        placement = None
+        if self.mesh is not None:
+            hws = [hw] * self.n_devices
+            stq, dtq, placement = _analyzer.analyze_sharded(
+                part, hws, strategy=self.strategy, mode=self.mode)
+            rep = _scheduler.simulate_sharded(stq, dtq, placement, hws)
         else:
-            stq, dtq = _analyzer.force_queue(part, hw, "DTQ")
-
-        # (4) scheduler simulation → hardware-time estimate
-        rep = _scheduler.simulate(stq, dtq, hw)
+            if self.mode == "dynamic":
+                stq, dtq = _analyzer.analyze_kernel(part, hw, self.strategy)
+            elif self.mode == "sparse_only":
+                stq, dtq = _analyzer.force_queue(part, hw, "STQ")
+            else:
+                stq, dtq = _analyzer.force_queue(part, hw, "DTQ")
+            # (4) scheduler simulation → hardware-time estimate
+            rep = _scheduler.simulate(stq, dtq, hw)
         plan = KernelPlan(part=part, stq=stq, dtq=dtq, report=rep,
                           row_density=np.asarray(row_d),
                           col_density=np.asarray(col_d),
-                          struct_key=struct_key)
+                          struct_key=struct_key, placement=placement)
         if plan_key is not None:
             self.cache.put_plan(plan_key, plan)
         self.last_plan = plan
@@ -297,6 +344,10 @@ class DynasparseEngine:
         pairing stays Y-structure-independent (``repro.core.dispatch``)."""
         if not (self.literal and self.batched):
             return None
+        if self.mesh is not None:
+            # mesh engines lower through sharded_dispatch_for — even at mesh
+            # size 1, so the degenerate case exercises the shared shard path
+            return None
         if not isinstance(x, SparseCOO) or plan.struct_key is None:
             return None
         if _dispatch.canvas_slots(plan.part, self.block) is None:
@@ -307,6 +358,29 @@ class DynasparseEngine:
             (plan.struct_key, digest),
             lambda: _dispatch.build_dispatch(
                 plan.part, plan.stq, plan.dtq, entry.stripes,
+                block=self.block, eps=self.eps, fingerprint=digest))
+
+    def sharded_dispatch_for(
+            self, plan: KernelPlan,
+            x) -> "_shard_exec.ShardedDispatch | None":
+        """The placed plan's :class:`~repro.core.shard_exec.ShardedDispatch`
+        (cached; lowered on first need), or ``None`` when the kernel is not
+        compilable — same decline conditions as :meth:`dispatch_for`, plus
+        a missing placement (plan made by a non-mesh engine)."""
+        if self.mesh is None or not (self.literal and self.batched):
+            return None
+        if not isinstance(x, SparseCOO) or plan.struct_key is None:
+            return None
+        if plan.placement is None:
+            return None
+        if _dispatch.canvas_slots(plan.part, self.block) is None:
+            return None
+        _, entry = self._packed_structure(plan, x)
+        digest = _dispatch.plan_digest(plan, self.block)
+        return self.cache.sharded_dispatch(
+            (plan.struct_key, digest, self.n_devices),
+            lambda: _shard_exec.build_sharded_dispatch(
+                plan.part, plan.stq, plan.dtq, entry.stripes, plan.placement,
                 block=self.block, eps=self.eps, fingerprint=digest))
 
     def activation_dispatch_for(
@@ -366,6 +440,21 @@ class DynasparseEngine:
             xd = self._ensure_dense(key, entry, x)
         return d, xd
 
+    def sharded_operands(
+            self, plan: KernelPlan,
+            x) -> "tuple[_shard_exec.ShardedDispatch, jnp.ndarray | None] | None":
+        """(sharded dispatch, densified-x-or-None) for a placed plan, or
+        ``None`` when not compilable — the mesh-engine counterpart of
+        :meth:`compiled_operands` used by the whole-model compiler."""
+        sd = self.sharded_dispatch_for(plan, x)
+        if sd is None:
+            return None
+        xd = None
+        if sd.needs_x:
+            key, entry = self._packed_structure(plan, x)
+            xd = self._ensure_dense(key, entry, x)
+        return sd, xd
+
     def execute(self, plan: KernelPlan, x, y) -> jnp.ndarray:
         """Functional result of a planned kernel (no re-analysis).
 
@@ -375,11 +464,18 @@ class DynasparseEngine:
         declines fall back to the eager batched (or per-task) path."""
         y = jnp.asarray(y)
         if self.literal:
+            interpret = (_ops.default_interpret()
+                         if self.interpret is None else self.interpret)
+            if self.mesh is not None:
+                spair = self.sharded_operands(plan, x)
+                if spair is not None:
+                    sd, xd = spair
+                    return _shard_exec.execute_sharded(
+                        sd, xd, y, mesh=self.mesh, interpret=interpret,
+                        stats=self.cache.stats)
             pair = self.compiled_operands(plan, x)
             if pair is not None:
                 d, xd = pair
-                interpret = (_ops.default_interpret()
-                             if self.interpret is None else self.interpret)
                 return _dispatch.execute_dispatch(
                     d, xd, y, interpret=interpret, stats=self.cache.stats)
             packed = None

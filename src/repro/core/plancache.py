@@ -179,6 +179,8 @@ class KernelPlan:
 
     ``struct_key`` is set when the X operand is cacheable (static sparsity);
     it addresses the packed-stripe entry used by the literal dispatch path.
+    ``placement`` is set by mesh engines (`analyze_sharded`): the contiguous
+    row-stripe band each device owns; ``None`` on single-device plans.
     """
     part: KernelPartition
     stq: list[Task]
@@ -187,6 +189,7 @@ class KernelPlan:
     row_density: np.ndarray
     col_density: np.ndarray
     struct_key: tuple | None = None
+    placement: object | None = None   # core.partition.DevicePlacement
 
 
 @dataclasses.dataclass
@@ -215,6 +218,7 @@ class PlanCache:
     _PLAN, _DENSITY, _STRUCT, _DISPATCH = "plan", "density", "struct", "dispatch"
     _ACT = "actdispatch"
     _CALIB = "calib"
+    _SHARD = "sharddispatch"
 
     def __init__(self, capacity: int = 256, max_bytes: int | None = None):
         self.capacity = capacity
@@ -356,6 +360,30 @@ class PlanCache:
         """Number of cached compiled-dispatch entries (bench gate:
         ``dispatch_builds == plan_count()`` in steady state)."""
         return sum(1 for (kind, _k) in self._entries if kind == self._DISPATCH)
+
+    def sharded_dispatch(self, key: tuple, compute: Callable[[], object]):
+        """Get-or-compute a :class:`~repro.core.shard_exec.ShardedDispatch`.
+
+        Keyed on (structure key, plan digest, device count) — the digest of
+        a placed plan already hashes the band layout, and the explicit
+        device count keeps sharded entries key-separated from unsharded
+        ones, so single- and multi-device plans of one graph coexist.
+        Counts into the shared dispatch_* counters: the bench invariants
+        (``dispatch_builds == plans`` in steady state) hold per engine
+        whether it shards or not."""
+        d = self._get(self._SHARD, key)
+        if d is not None:
+            self.stats.dispatch_hits += 1
+            return d
+        d = compute()
+        if d is not None:
+            self.stats.dispatch_builds += 1
+            self._put(self._SHARD, key, d)
+        return d
+
+    def sharded_count(self) -> int:
+        """Number of cached sharded-dispatch entries."""
+        return sum(1 for (kind, _k) in self._entries if kind == self._SHARD)
 
     def activation_dispatch(self, key: tuple, compute: Callable[[], object]):
         """Get-or-compute an

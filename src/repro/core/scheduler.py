@@ -45,6 +45,10 @@ class ScheduleReport:
     data_loaded: float              # elements (Table V "#Data")
     data_dense_equiv: float
     memory_time: float              # total bytes / BW (bandwidth bound)
+    # sharded plans: one sub-report per mesh device (empty when unsharded).
+    # The scalar fields above stay the combined view (makespan = slowest
+    # device; busy/flops/data = totals) so existing consumers are unchanged.
+    per_device: tuple = ()
 
     @classmethod
     def zero(cls) -> "ScheduleReport":
@@ -55,6 +59,13 @@ class ScheduleReport:
                    data_loaded=0.0, data_dense_equiv=0.0, memory_time=0.0)
 
     def merge(self, other: "ScheduleReport") -> "ScheduleReport":
+        per_device: tuple = ()
+        if self.per_device or other.per_device:
+            a, b = list(self.per_device), list(other.per_device)
+            n = max(len(a), len(b))
+            a += [ScheduleReport.zero()] * (n - len(a))
+            b += [ScheduleReport.zero()] * (n - len(b))
+            per_device = tuple(x.merge(y) for x, y in zip(a, b))
         return ScheduleReport(
             makespan=self.makespan + other.makespan,
             t_sparse_busy=self.t_sparse_busy + other.t_sparse_busy,
@@ -68,6 +79,7 @@ class ScheduleReport:
             data_loaded=self.data_loaded + other.data_loaded,
             data_dense_equiv=self.data_dense_equiv + other.data_dense_equiv,
             memory_time=self.memory_time + other.memory_time,
+            per_device=per_device,
         )
 
     def scaled(self, s: float) -> "ScheduleReport":
@@ -84,6 +96,7 @@ class ScheduleReport:
             data_loaded=self.data_loaded * s,
             data_dense_equiv=self.data_dense_equiv * s,
             memory_time=self.memory_time * s,
+            per_device=tuple(r.scaled(s) for r in self.per_device),
         )
 
 
@@ -124,6 +137,33 @@ def simulate(stq: list[Task], dtq: list[Task], hw: HardwareModel) -> ScheduleRep
         data_loaded=d_load,
         data_dense_equiv=d_dense,
         memory_time=memory_time,
+    )
+
+
+def simulate_sharded(
+    stq: list[Task],
+    dtq: list[Task],
+    placement,
+    hws: list[HardwareModel],
+) -> ScheduleReport:
+    """Simulate a device-placed plan: each device runs its band's queues
+    concurrently with every other device.  Combined makespan is the slowest
+    device; busy times / flops / data are totals; ``per_device`` carries the
+    per-device sub-reports for :attr:`EngineReport.by_device`."""
+    if placement.n_devices != len(hws):
+        raise ValueError(f"placement has {placement.n_devices} devices, "
+                         f"got {len(hws)} hardware models")
+    per_dev = []
+    for d, hw in enumerate(hws):
+        per_dev.append(simulate([t for t in stq if t.device == d],
+                                [t for t in dtq if t.device == d], hw))
+    combined = ScheduleReport.zero()
+    for rep in per_dev:
+        combined = combined.merge(rep)
+    return dataclasses.replace(
+        combined,
+        makespan=max((r.makespan for r in per_dev), default=0.0),
+        per_device=tuple(per_dev),
     )
 
 

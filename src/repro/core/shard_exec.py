@@ -1,0 +1,293 @@
+"""Sharded compiled dispatch — one per-shard program under ``shard_map``.
+
+A device-placed plan (``KernelPlan.placement`` from
+:func:`repro.core.analyzer.analyze_sharded`) lowers here into a
+:class:`ShardedDispatch`: the same descriptor arrays a
+:class:`~repro.core.dispatch.CompiledDispatch` carries, but banded by device
+(leading device axis, contiguous LOCAL row numbering inside each band) and
+executed by ONE ``shard_map``-wrapped :func:`~repro.core.dispatch.apply_dispatch`
+body on a 1-D ``("data",)`` mesh.  Mesh size 1 is the degenerate case of the
+same code path — there is no single-device fork — and the result is
+bit-identical to the unsharded executor (see below).
+
+Uniform shard geometry via a GHOST row-tile
+-------------------------------------------
+``shard_map`` needs every shard to run the identical program on
+identically-shaped operands, but min-makespan bands are ragged (different
+stripe counts per device; stripe counts need not divide the device count).
+Each shard therefore gets ``nrt_local = max_band_tiles + 1`` row tiles: real
+bands occupy a prefix, and the extra GHOST tile absorbs all descriptor
+padding needed to equalize per-device entry counts:
+
+- GEMM pads address output tile ``(nrt_local - 1, 0)`` — the gathered X slab
+  for the ghost tile is all zeros, so the scatter overwrites the ghost tile
+  with zeros;
+- SpDMM / SpMM pads reference an appended all-zero pool block with
+  ``first = 0`` at the ghost tile's first block-row, so they ACCUMULATE
+  ``0 · Y`` into an already-zero canvas block (the kernels' ``first == 1``
+  zero-init / ``first == 0`` accumulate semantics make this an exact bitwise
+  no-op — the same sentinel-zero-block idiom ``kernels/spmm.py`` uses for its
+  own padding triples).
+
+Bit-identity with the unsharded executor holds because every REAL output
+block receives exactly the contribution sequence it receives globally: the
+per-band entry sort (local ``out_row`` = global ``out_row`` − band offset)
+preserves the global per-block ordering, Y is replicated (cross-band edges
+are satisfied by full X col-stripe replication — an all-gather in spirit;
+true halo exchange is a ROADMAP follow-up), and float accumulation order per
+block is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import dispatch as _dispatch
+
+
+@dataclasses.dataclass
+class ShardedDispatch:
+    """Device-banded instruction stream of one placed kernel.
+
+    ``geom`` is the per-shard LOCAL geometry (uniform across devices:
+    ``nrt = max_band_tiles + 1`` with the ghost tile, ``M = m_pad``).
+    ``arrays`` mirrors :class:`~repro.core.dispatch.CompiledDispatch.arrays`
+    with a leading device axis.  ``band_rows[d]`` is the count of logical
+    output rows device ``d`` owns (the final assembly concatenates
+    ``z[d, :band_rows[d]]``).
+    """
+    geom: _dispatch.DispatchGeometry
+    n_devices: int
+    band_starts: tuple[int, ...]
+    band_rows: tuple[int, ...]
+    M: int                             # global logical row count
+    arrays: dict[str, jax.Array]
+    fingerprint: str
+
+    @property
+    def needs_x(self) -> bool:
+        return self.geom.has_gemm
+
+
+def _pool_dtype(stripes):
+    for s in stripes.values():
+        return np.asarray(s.blocks).dtype
+    return np.dtype(np.float32)
+
+
+def _band_tasks(tasks, placement, d):
+    lo, hi = placement.band_starts[d], placement.band_starts[d + 1]
+    return [dataclasses.replace(t, i=t.i - lo) for t in tasks if lo <= t.i < hi]
+
+
+def build_sharded_dispatch(part, stq, dtq, stripes, placement,
+                           *, block: int, eps: float = 0.0,
+                           fingerprint: str = "") -> ShardedDispatch | None:
+    """Lower a device-placed plan into a :class:`ShardedDispatch`.
+
+    Same O(nnz blocks) vectorized-numpy cost as
+    :func:`~repro.core.dispatch.build_dispatch`, paid once per (structure,
+    assignment, mesh geometry); ``None`` when the canvas geometry cannot
+    take the in-place index maps (caller falls back to the eager path,
+    which is placement-agnostic and already correct).
+    """
+    slots = _dispatch.canvas_slots(part, block)
+    if slots is None:
+        return None
+    SM, SN = slots
+    B = block
+    R, C = SM // B, SN // B
+    nd = placement.n_devices
+    bs = placement.band_starts
+    max_band = max(placement.band_sizes()) if nd else 0
+    nrt_l = max_band + 1                       # +1 ghost tile for padding
+    ghost_row = (nrt_l - 1) * R                # first block-row of the ghost
+
+    band_rows = tuple(
+        sum(part.row_extent(i) for i in placement.stripes_of(d))
+        for d in range(nd))
+
+    per_gemm, per_spdmm, per_spmm = [], [], []
+    for d in range(nd):
+        lo = bs[d]
+        local_stripes = {i - lo: stripes[i] for i in placement.stripes_of(d)
+                         if i in stripes}
+        g = _band_tasks(dtq, placement, d)
+        sp = _band_tasks([t for t in stq if t.primitive != "SpMM"],
+                         placement, d)
+        mm = _band_tasks([t for t in stq if t.primitive == "SpMM"],
+                         placement, d)
+        per_gemm.append(g)
+
+        if sp:
+            offsets, pool = _dispatch._stripe_pool(sp, local_stripes)
+            per_spdmm.append((np.asarray(pool),
+                              _dispatch.spdmm_entry_arrays(
+                                  sp, local_stripes, offsets, R)))
+        else:
+            per_spdmm.append((np.zeros((0, B, B), _pool_dtype(stripes)),
+                              None))
+
+        if mm:
+            offsets, pool = _dispatch._stripe_pool(mm, local_stripes)
+            per_spmm.append((np.asarray(pool),
+                             _dispatch._spmm_dense_y_triples(
+                                 mm, part, local_stripes, offsets, R, C,
+                                 n_y_block_cols=part.n_col_tiles * C)))
+        else:
+            per_spmm.append((np.zeros((0, B, B), _pool_dtype(stripes)),
+                             None))
+
+    n_gemm = max((len(g) for g in per_gemm), default=0)
+    n_sp = max((0 if e is None else len(e[0]) for _, e in per_spdmm),
+               default=0)
+    n_mm = max((0 if e is None else len(e[0]) for _, e in per_spmm),
+               default=0)
+
+    geom = _dispatch.DispatchGeometry(
+        M=nrt_l * SM, K=part.K, N=part.N, tm=part.tile_m, tn=part.tile_n,
+        SM=SM, SN=SN, B=B, nrt=nrt_l, nct=part.n_col_tiles,
+        has_gemm=n_gemm > 0, has_spdmm=n_sp > 0, has_spmm=n_mm > 0,
+        eps=eps)
+
+    arrays: dict[str, jax.Array] = {}
+
+    if n_gemm:
+        rows = np.full((nd, n_gemm), nrt_l - 1, dtype=np.int32)
+        cols = np.zeros((nd, n_gemm), dtype=np.int32)
+        for d, g in enumerate(per_gemm):
+            rows[d, :len(g)] = [t.i for t in g]
+            cols[d, :len(g)] = [t.j for t in g]
+        arrays["gemm_rows"] = jnp.asarray(rows)
+        arrays["gemm_cols"] = jnp.asarray(cols)
+
+    def _stack_section(per_dev, n_entries, names, pad_cols):
+        """Pad each device's (pool, entry-arrays) to common shapes and
+        stack.  ``pad_cols[k]`` gives the pad value per entry column as a
+        function of the padded pool length."""
+        pool_len = max(len(p) for p, _ in per_dev) + 1   # +1 zero sentinel
+        pools, columns = [], [[] for _ in names]
+        for pool, entries in per_dev:
+            pools.append(np.concatenate(
+                [pool, np.zeros((pool_len - len(pool),) + pool.shape[1:],
+                                pool.dtype)], axis=0))
+            cols = (entries if entries is not None
+                    else tuple(np.zeros(0, np.int32) for _ in names))
+            pad_n = n_entries - len(cols[0])
+            for k, c in enumerate(cols):
+                columns[k].append(np.concatenate(
+                    [c, np.full(pad_n, pad_cols[k](pool_len),
+                                dtype=np.int32)]))
+        out = {"pool": jnp.asarray(np.stack(pools))}
+        for k, name in enumerate(names):
+            out[name] = jnp.asarray(np.stack(columns[k]).astype(np.int32))
+        return out
+
+    if n_sp:
+        sec = _stack_section(
+            per_spdmm, n_sp,
+            ("a_ids", "y_rows", "out_rows", "out_cols", "first"),
+            # pads: zero-sentinel A block × Y row 0 → ghost block, first=0
+            (lambda pl: pl - 1, lambda pl: 0, lambda pl: ghost_row,
+             lambda pl: 0, lambda pl: 0))
+        arrays["sp_pool"] = sec["pool"]
+        for name in ("a_ids", "y_rows", "out_rows", "out_cols", "first"):
+            arrays[f"sp_{name}"] = sec[name]
+
+    if n_mm:
+        sec = _stack_section(
+            per_spmm, n_mm,
+            ("a_ids", "y_ids", "out_rows", "out_cols", "first"),
+            (lambda pl: pl - 1, lambda pl: 0, lambda pl: ghost_row,
+             lambda pl: 0, lambda pl: 0))
+        arrays["mm_pool"] = sec["pool"]
+        for name in ("a_ids", "y_ids", "out_rows", "out_cols", "first"):
+            arrays[f"mm_{name}"] = sec[name]
+
+    return ShardedDispatch(geom=geom, n_devices=nd, band_starts=tuple(bs),
+                           band_rows=band_rows, M=part.M, arrays=arrays,
+                           fingerprint=fingerprint)
+
+
+def apply_sharded(geom, band_rows, arrays, x, y, *, mesh, interpret: bool):
+    """Traceable sharded executor body: slab X per band → ``shard_map`` the
+    SHARED :func:`~repro.core.dispatch.apply_dispatch` body → concatenate
+    each band's logical rows.  Inlines into larger jitted programs
+    (``models.gnn.compile_model``), exactly like the unsharded body."""
+    nd = len(band_rows)
+    y = jnp.asarray(y)
+
+    if geom.has_gemm:
+        if x is None:
+            raise ValueError("sharded dispatch: dense-queue tasks need the "
+                             "densified x operand (got x=None)")
+        x = jnp.asarray(x)
+        slabs, row0 = [], 0
+        for r in band_rows:
+            sl = jax.lax.slice_in_dim(x, row0, row0 + r, axis=0)
+            slabs.append(jnp.pad(sl, ((0, geom.m_pad - r), (0, 0))))
+            row0 += r
+        x_sh = jnp.stack(slabs)
+
+        def body(arrs, xs, yy):
+            local = {k: v[0] for k, v in arrs.items()}
+            return _dispatch.apply_dispatch(
+                geom, local, xs[0], yy, interpret=interpret)[None]
+
+        f = compat.shard_map(body, mesh=mesh,
+                             in_specs=(P("data"), P("data"), P()),
+                             out_specs=P("data"))
+        zs = f(arrays, x_sh, y)
+    else:
+        def body(arrs, yy):
+            local = {k: v[0] for k, v in arrs.items()}
+            return _dispatch.apply_dispatch(
+                geom, local, None, yy, interpret=interpret)[None]
+
+        f = compat.shard_map(body, mesh=mesh,
+                             in_specs=(P("data"), P()),
+                             out_specs=P("data"))
+        zs = f(arrays, y)
+
+    parts = [zs[d, :band_rows[d]] for d in range(nd) if band_rows[d]]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("geom", "band_rows", "mesh", "interpret"))
+def _run_sharded(geom, band_rows, arrays, x, y, *, mesh, interpret):
+    return apply_sharded(geom, band_rows, arrays, x, y,
+                         mesh=mesh, interpret=interpret)
+
+
+def _shard_signature(sd, x, y, mesh, interpret):
+    arr_sig = tuple(sorted((k, v.shape, str(v.dtype))
+                           for k, v in sd.arrays.items()))
+    x_sig = None if x is None else (tuple(x.shape), str(x.dtype))
+    return ("shard", sd.geom, sd.band_rows, int(np.prod(mesh.devices.shape)),
+            arr_sig, x_sig, tuple(y.shape), str(y.dtype), interpret)
+
+
+def execute_sharded(sd: ShardedDispatch, x, y, *, mesh, interpret: bool,
+                    stats=None) -> jax.Array:
+    """Run one sharded compiled kernel: a single jitted call, zero host
+    descriptor work.  Shares the trace registry with the unsharded executor
+    so ``CacheStats`` trace accounting stays one ledger."""
+    y = jnp.asarray(y)
+    key = _shard_signature(sd, x, y, mesh, interpret)
+    with _dispatch._TRACE_LOCK:
+        hit = key in _dispatch._TRACE_SEEN
+        _dispatch._TRACE_SEEN.add(key)
+    if stats is not None:
+        if hit:
+            stats.trace_cache_hits += 1
+        else:
+            stats.trace_builds += 1
+    return _run_sharded(sd.geom, sd.band_rows, sd.arrays, x, y,
+                        mesh=mesh, interpret=interpret)

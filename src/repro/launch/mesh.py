@@ -16,6 +16,23 @@ import jax
 from repro import compat
 
 
+def make_data_mesh(n_devices: int) -> jax.sharding.Mesh:
+    """1-D ``("data",)`` mesh over the first ``n_devices`` local devices —
+    the mesh shape ``DynasparseEngine(mesh=...)`` shards row-stripe bands
+    over.  Raises when the host doesn't have that many devices (e.g. a
+    snapshot produced on an 8-device host replayed on a 1-device box)."""
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    avail = len(jax.devices())
+    if n_devices > avail:
+        raise ValueError(
+            f"requested a {n_devices}-device data mesh but only {avail} "
+            f"device(s) are visible (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N to force "
+            f"host devices for testing)")
+    return compat.make_mesh((n_devices,), ("data",))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -26,8 +43,16 @@ def make_mesh_for_devices(n_devices: int, *, model_parallel: int = 1,
                           pods: int = 1) -> jax.sharding.Mesh:
     """Elastic variant: largest (pod, data, model) mesh for a device count
     (used by distributed.elastic after failures)."""
-    assert n_devices % (model_parallel * pods) == 0, (n_devices,
-                                                      model_parallel, pods)
+    if n_devices < 1 or model_parallel < 1 or pods < 1:
+        raise ValueError(
+            f"mesh factors must be positive: n_devices={n_devices}, "
+            f"model_parallel={model_parallel}, pods={pods}")
+    if n_devices % (model_parallel * pods) != 0:
+        raise ValueError(
+            f"n_devices={n_devices} is not divisible by "
+            f"model_parallel*pods={model_parallel * pods} "
+            f"(model_parallel={model_parallel}, pods={pods}); "
+            f"cannot form a rectangular (pod, data, model) mesh")
     data = n_devices // (model_parallel * pods)
     if pods > 1:
         return compat.make_mesh((pods, data, model_parallel),

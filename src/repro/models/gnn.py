@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dispatch as _dispatch
+from repro.core import shard_exec as _shard_exec
 from repro.core import sparsity
 from repro.core.engine import DynasparseEngine, EngineReport
 from repro.core.primitives import SparseCOO
@@ -239,7 +240,8 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
     """
     transport = transport if transport is not None else (lambda mm: mm)
     h = jnp.asarray(h)
-    # ("sparse", geom) | ("act", geom) | ("gemm", None) per kernel
+    # ("sparse", geom) | ("shard", (geom, band_rows)) | ("act", geom)
+    # | ("gemm", None) per kernel
     records: list[tuple[str, object]] = []
     payload: list = []
     compilable = [True]
@@ -248,6 +250,17 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
     def recording(x, y, name="kernel"):
         z, _ = engine.matmul(x, y, name=name)
         if isinstance(x, SparseCOO):
+            if engine.mesh is not None:
+                spair = engine.sharded_operands(engine.last_plan, x)
+                if spair is None:
+                    compilable[0] = False
+                    records.append(("gemm", None))
+                    payload.append(None)
+                else:
+                    sd, xd = spair
+                    records.append(("shard", (sd.geom, sd.band_rows)))
+                    payload.append({"arrays": dict(sd.arrays), "xd": xd})
+                return z
             pair = engine.compiled_operands(engine.last_plan, x)
             if pair is None:
                 compilable[0] = False
@@ -293,6 +306,11 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
                     geom, p["arrays"], x, y, interpret=interpret)
                 act_diags.append(diag)
                 return z
+            if kind == "shard":
+                sgeom, band_rows = geom
+                return _shard_exec.apply_sharded(
+                    sgeom, band_rows, p["arrays"], p["xd"], y,
+                    mesh=engine.mesh, interpret=interpret)
             return _dispatch.apply_dispatch(geom, p["arrays"], p["xd"], y,
                                             interpret=interpret)
 
@@ -308,7 +326,7 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
         model=model, run=jax.jit(replay), payload=payload, report=report,
         input_sketch=np.asarray(sketch), sketch_tile=tn,
         n_kernels=len(records),
-        n_sparse=sum(1 for k, _ in records if k == "sparse"),
+        n_sparse=sum(1 for k, _ in records if k in ("sparse", "shard")),
         n_act=sum(1 for k, _ in records if k == "act"),
         stats=engine.cache.stats)
 

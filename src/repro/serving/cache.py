@@ -39,7 +39,11 @@ from repro.core.plancache import coo_fingerprint
 # v3: ActivationGeometry grew the per-stripe ``caps`` budget field and the
 # calibration entry kind (``CalibratedModel`` measurements) was added —
 # same rejection rationale for v2 snapshots.
-_PERSIST_VERSION = 3
+# v4: mesh-sharded dispatch — KernelPlan grew ``placement``, Task grew
+# ``device``, ScheduleReport grew ``per_device``, and the sharded-dispatch
+# entry kind was added; v3 snapshots would restore plans whose dataclasses
+# miss those fields.
+_PERSIST_VERSION = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +153,14 @@ class SharedPlanCache(PlanCache):
     def dispatch_count(self):
         with self._lock:
             return super().dispatch_count()
+
+    def sharded_dispatch(self, key, compute):
+        with self._lock:
+            return super().sharded_dispatch(key, compute)
+
+    def sharded_count(self):
+        with self._lock:
+            return super().sharded_count()
 
     def activation_dispatch(self, key, compute):
         with self._lock:
@@ -271,14 +283,24 @@ class SharedPlanCache(PlanCache):
             live = list(self.items())
             self._entries.clear()
             self.bytes_used = 0
-            loaded = skipped = 0
+            n_live_devices = len(jax.devices())
+            loaded = skipped = mesh_skipped = 0
             for (kind, key), value in payload["entries"]:
                 if any(key_mentions(key, fp) for fp in stale):
                     skipped += 1
                     continue
+                if kind == self._SHARD and (
+                        getattr(value, "n_devices", 1) > n_live_devices):
+                    # sharded dispatch from a bigger host: its mesh cannot
+                    # be constructed here, so the entry could never be hit
+                    # (keys carry the device count) — don't resurrect dead
+                    # device payloads into the byte budget (an 8-device
+                    # snapshot must not poison a 1-device restart)
+                    mesh_skipped += 1
+                    continue
                 if kind == self._STRUCT:
                     value = _struct_to_device(value)
-                elif kind in (self._DISPATCH, self._ACT):
+                elif kind in (self._DISPATCH, self._ACT, self._SHARD):
                     value = _dispatch_to_device(value)
                 super()._put(kind, key, value)
                 loaded += 1
@@ -287,6 +309,7 @@ class SharedPlanCache(PlanCache):
             for gid, key in snap_graphs.items():
                 self._graphs.setdefault(gid, key)
             return {"entries": loaded, "stale_skipped": skipped,
+                    "mesh_skipped": mesh_skipped,
                     "graphs": len(snap_graphs)}
 
 

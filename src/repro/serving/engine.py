@@ -94,6 +94,14 @@ class ServingConfig:
     # need × slack) instead of one uniform max-need budget — cuts padded-
     # slot waste on skewed activations; off restores the uniform budget.
     activation_per_stripe: bool = True
+    # Multi-device dispatch: shard each graph's row-stripe bands over a 1-D
+    # ("data",) mesh of this many local devices (None = classic
+    # single-device engine).  Threads through warmup → compile →
+    # drift-replan: the constructed DynasparseEngine plans with a
+    # two-level (device, queue) placement and executes compiled kernels
+    # under shard_map.  Requires the host to expose that many devices
+    # (``launch.mesh.make_data_mesh`` raises otherwise).
+    n_devices: int | None = None
 
 
 @dataclasses.dataclass
@@ -256,9 +264,25 @@ class ServingEngine:
         self.params = params
         self.config = config
         if engine is None:
-            # `is None`, not `or`: an empty PlanCache is falsy (__len__)
-            engine = DynasparseEngine(
-                cache=cache if cache is not None else get_shared_cache())
+            shared = cache if cache is not None else get_shared_cache()
+            if config.n_devices is not None:
+                from repro.launch.mesh import make_data_mesh
+                # mesh serving implies the literal batched engine — the
+                # sharded path is a compiled-dispatch route; a non-literal
+                # mesh engine would silently fall back to single-device
+                # eager execution
+                engine = DynasparseEngine(
+                    cache=shared, mesh=make_data_mesh(config.n_devices),
+                    literal=True, batched=True)
+            else:
+                # `is None`, not `or`: an empty PlanCache is falsy (__len__)
+                engine = DynasparseEngine(cache=shared)
+        elif config.n_devices is not None and (
+                engine.n_devices != config.n_devices):
+            raise ValueError(
+                f"ServingConfig.n_devices={config.n_devices} conflicts with "
+                f"the supplied engine's mesh ({engine.n_devices} device(s)); "
+                f"pass one or the other")
         # the sketch policy is applied around each dispatch, never left on a
         # caller-supplied engine (no hidden mutation outliving the serve)
         self.engine = engine
@@ -286,6 +310,8 @@ class ServingEngine:
         n_act = len(st.activation_batches)
         return {
             "plans": self.engine.cache.plan_count(),
+            "n_devices": self.engine.n_devices,
+            "sharded_dispatches": self.engine.cache.sharded_count(),
             "dispatch_builds": s.dispatch_builds,
             "dispatch_hits": s.dispatch_hits,
             "act_builds": s.act_builds,

@@ -1,0 +1,243 @@
+"""Placement layer + mesh plumbing units that run on ONE device.
+
+The multi-device behaviour (shard_map execution on forced 4/8-device hosts)
+lives in tests/test_sharding_multidev.py; everything here exercises the
+plan-side machinery — band partitioning, two-level (device, queue)
+assignment, per-device reporting, mesh validation, plan-key separation and
+the mesh-size-1 degenerate engine — without touching XLA_FLAGS.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DynasparseEngine, SparseCOO
+from repro.core import analyzer as _analyzer
+from repro.core import scheduler as _scheduler
+from repro.core.partition import DevicePlacement, band_partition, make_tasks
+from repro.core.perfmodel import VCK5000
+from repro.launch.mesh import make_data_mesh, make_mesh_for_devices
+from repro.serving import SharedPlanCache
+from repro.serving.engine import ServingConfig, ServingEngine
+
+
+def _rand_graph(n=96, nnz=500, seed=0):
+    r = np.random.default_rng(seed)
+    rows = np.sort(r.integers(0, n, nnz)).astype(np.int32)
+    cols = r.integers(0, n, nnz).astype(np.int32)
+    vals = r.standard_normal(nnz).astype(np.float32)
+    return SparseCOO((n, n), jnp.asarray(rows), jnp.asarray(cols),
+                     jnp.asarray(vals), tag="adjacency")
+
+
+# ------------------------------------------------------------ band_partition
+def test_band_partition_balances_uniform_loads():
+    loads = np.ones((4, 8))
+    assert band_partition(loads, 4) == (0, 2, 4, 6, 8)
+
+
+def test_band_partition_is_min_makespan():
+    """DP result is never worse than any brute-forced contiguous split."""
+    rng = np.random.default_rng(1)
+    loads = rng.random((3, 7))
+    starts = band_partition(loads, 3)
+    cost = max(loads[d, starts[d]:starts[d + 1]].sum() for d in range(3))
+    best = min(
+        max(loads[0, :a].sum(), loads[1, a:b].sum(), loads[2, b:].sum())
+        for a in range(8) for b in range(a, 8))
+    assert cost <= best + 1e-12
+
+
+def test_band_partition_heterogeneous_devices_shift_the_split():
+    # device 1 is 4x slower: it should get a smaller band
+    loads = np.ones((2, 8))
+    loads[1] *= 4.0
+    starts = band_partition(loads, 2)
+    sizes = (starts[1] - starts[0], starts[2] - starts[1])
+    assert sizes[0] > sizes[1]
+
+
+def test_band_partition_more_devices_than_stripes():
+    starts = band_partition(np.ones((5, 2)), 5)
+    placement = DevicePlacement(5, starts)
+    assert placement.n_row_tiles == 2
+    assert sum(placement.band_sizes()) == 2
+
+
+def test_band_partition_rejects_bad_shape():
+    with pytest.raises(ValueError, match="n_devices, n_stripes"):
+        band_partition(np.ones(4), 2)
+
+
+# ---------------------------------------------------------- DevicePlacement
+def test_device_placement_validation_and_lookup():
+    p = DevicePlacement(3, (0, 2, 2, 5))
+    assert p.n_row_tiles == 5
+    assert p.band_sizes() == (2, 0, 3)
+    assert [p.device_of(s) for s in range(5)] == [0, 0, 2, 2, 2]
+    assert list(p.stripes_of(1)) == []
+    with pytest.raises(ValueError, match="malformed"):
+        DevicePlacement(2, (0, 5))
+    with pytest.raises(ValueError, match="monotone"):
+        DevicePlacement(2, (0, 3, 2))
+    with pytest.raises(ValueError, match="outside"):
+        p.device_of(5)
+
+
+# ----------------------------------------------------------- analyze_sharded
+def _part(nrt=6, nct=2, tm=8, tn=8):
+    rng = np.random.default_rng(3)
+    return make_tasks("k", nrt * tm, 64, nct * tn,
+                      rng.random(nrt), rng.random(nct), tm, tn)
+
+
+def test_analyze_sharded_covers_every_task_once():
+    part = _part()
+    stq, dtq, placement = _analyzer.analyze_sharded(
+        part, [VCK5000] * 3)
+    assert len(stq) + len(dtq) == len(part.tasks)
+    for t in stq + dtq:
+        assert t.device == placement.device_of(t.i)
+
+
+def test_analyze_sharded_one_device_matches_analyze_kernel():
+    part = _part()
+    stq_s, dtq_s, placement = _analyzer.analyze_sharded(part, [VCK5000])
+    stq, dtq = _analyzer.analyze_kernel(_part(), VCK5000, "balanced")
+    assert placement.band_starts == (0, part.n_row_tiles)
+    key = lambda ts: sorted((t.i, t.j, t.queue, t.primitive) for t in ts)
+    assert key(stq_s) == key(stq) and key(dtq_s) == key(dtq)
+
+
+def test_analyze_sharded_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="at least one"):
+        _analyzer.analyze_sharded(_part(), [])
+    with pytest.raises(ValueError, match="unknown mode"):
+        _analyzer.analyze_sharded(_part(), [VCK5000], mode="nope")
+
+
+# ---------------------------------------------------------- simulate_sharded
+def test_simulate_sharded_per_device_reports():
+    part = _part()
+    hws = [VCK5000] * 2
+    stq, dtq, placement = _analyzer.analyze_sharded(part, hws)
+    rep = _scheduler.simulate_sharded(stq, dtq, placement, hws)
+    assert len(rep.per_device) == 2
+    assert rep.makespan == max(r.makespan for r in rep.per_device)
+    assert rep.flops_executed == pytest.approx(
+        sum(r.flops_executed for r in rep.per_device))
+    with pytest.raises(ValueError, match="hardware models"):
+        _scheduler.simulate_sharded(stq, dtq, placement, hws[:1])
+
+
+def test_schedule_report_merge_pads_per_device():
+    a = _scheduler.ScheduleReport.zero()
+    hws = [VCK5000] * 2
+    stq, dtq, placement = _analyzer.analyze_sharded(_part(), hws)
+    rep = _scheduler.simulate_sharded(stq, dtq, placement, hws)
+    merged = a.merge(rep)
+    assert len(merged.per_device) == 2
+    scaled = rep.scaled(0.5)
+    assert scaled.per_device[0].makespan == pytest.approx(
+        rep.per_device[0].makespan * 0.5)
+
+
+# ----------------------------------------------------- mesh-1 engine parity
+def test_mesh_size_one_engine_matches_plain_engine():
+    """On this 1-device host, mesh=make_data_mesh(1) runs the sharded code
+    path end to end and must be bit-identical to the plain engine."""
+    adj = _rand_graph()
+    y = np.random.default_rng(4).standard_normal((96, 8)).astype(np.float32)
+    plain = DynasparseEngine(tile_m=16, tile_n=8, literal=True)
+    mesh1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True,
+                             mesh=make_data_mesh(1))
+    z_p = np.asarray(plain.matmul(adj, y)[0])
+    z_m = np.asarray(mesh1.matmul(adj, y)[0])
+    assert (z_p == z_m).all()
+    assert mesh1.cache.sharded_count() == 1
+    # the mesh engine reports a per-device breakdown
+    rep = mesh1.report
+    assert len(rep.by_device) == 1
+    assert rep.by_device[0].makespan == pytest.approx(rep.total.makespan)
+
+
+def test_mesh_engine_plan_keys_are_separate():
+    """Mesh and non-mesh engines sharing one cache must not alias plans —
+    the mesh plan carries a placement the plain executor doesn't expect."""
+    cache = SharedPlanCache()
+    adj = _rand_graph(seed=5)
+    y = np.random.default_rng(5).standard_normal((96, 8)).astype(np.float32)
+    plain = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache)
+    mesh1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache,
+                             mesh=make_data_mesh(1))
+    plain.matmul(adj, y)
+    assert plain.last_plan.placement is None
+    mesh1.matmul(adj, y)
+    assert mesh1.last_plan.placement is not None
+    assert cache.plan_count() == 2
+
+
+def test_mesh_plan_digest_depends_on_geometry():
+    """plan_digest must separate placements so a sharded dispatch compiled
+    for one banding can never be replayed against another."""
+    import dataclasses
+
+    from repro.core.dispatch import plan_digest
+
+    eng = DynasparseEngine(tile_m=16, tile_n=8, literal=True,
+                           mesh=make_data_mesh(1))
+    adj = _rand_graph(seed=6)
+    y = np.random.default_rng(6).standard_normal((96, 8)).astype(np.float32)
+    eng.matmul(adj, y)
+    plan = eng.last_plan
+    nrt = plan.part.n_row_tiles
+    other = dataclasses.replace(
+        plan, placement=DevicePlacement(2, (0, 0, nrt)))
+    unplaced = dataclasses.replace(plan, placement=None)
+    digests = {plan_digest(p, eng.block) for p in (plan, other, unplaced)}
+    assert len(digests) == 3
+
+
+def test_mesh_engine_rejects_non_data_axes():
+    mesh = make_mesh_for_devices(1)   # axes ("data", "model")
+    with pytest.raises(ValueError):
+        DynasparseEngine(mesh=mesh)
+
+
+# -------------------------------------------------------------- mesh factory
+def test_make_data_mesh_validates():
+    with pytest.raises(ValueError, match=">= 1"):
+        make_data_mesh(0)
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        make_data_mesh(len(jax.devices()) + 1)
+    mesh = make_data_mesh(1)
+    assert mesh.axis_names == ("data",)
+
+
+def test_make_mesh_for_devices_validates():
+    with pytest.raises(ValueError, match="positive"):
+        make_mesh_for_devices(0)
+    with pytest.raises(ValueError, match="not divisible"):
+        make_mesh_for_devices(3, model_parallel=2)
+
+
+# ------------------------------------------------------------------ serving
+def test_serving_config_n_devices_one_device():
+    from repro.models import gnn
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = ServingEngine("GCN", params,
+                        config=ServingConfig(max_batch=2, n_devices=1),
+                        cache=SharedPlanCache())
+    assert srv.engine.n_devices == 1
+    assert srv.engine.mesh is not None
+    assert srv.dispatch_stats()["n_devices"] == 1
+
+
+def test_serving_config_n_devices_conflict():
+    from repro.models import gnn
+    params = gnn.init_params("GCN", 12, 8, 5)
+    eng = DynasparseEngine(literal=True)   # 1 "device", no mesh
+    with pytest.raises(ValueError, match="conflicts"):
+        ServingEngine("GCN", params, engine=eng,
+                      config=ServingConfig(max_batch=2, n_devices=2))

@@ -267,6 +267,48 @@ def test_load_rejects_unknown_version(tmp_path):
         SharedPlanCache().load(path)
 
 
+def test_load_skips_sharded_dispatch_from_bigger_mesh(tmp_path):
+    """A snapshot carrying an 8-device sharded dispatch must not poison a
+    1-device restart: the oversized entry is skipped (and counted in the
+    manifest), while a mesh-1 sharded entry loads and is re-uploaded."""
+    import pickle
+
+    from repro.core.dispatch import DispatchGeometry
+    from repro.core.shard_exec import ShardedDispatch
+    from repro.serving.cache import _PERSIST_VERSION
+
+    geom = DispatchGeometry(M=16, K=16, N=8, tm=8, tn=8, SM=8, SN=8, B=8,
+                            nrt=2, nct=1, has_gemm=False, has_spdmm=True,
+                            has_spmm=False)
+    arrays = {"sp_a": np.zeros((1, 3), np.int32)}
+
+    def shard(nd):
+        return ShardedDispatch(
+            geom=geom, n_devices=nd, band_starts=tuple(range(nd + 1)),
+            band_rows=(16,) * nd, M=16, arrays=dict(arrays),
+            fingerprint=f"fp{nd}")
+
+    path = os.fspath(tmp_path / "mesh.pkl")
+    entries = [(("sharddispatch", ("k8", "fp8", 8)), shard(8)),
+               (("sharddispatch", ("k1", "fp1", 1)), shard(1))]
+    with open(path, "wb") as f:
+        pickle.dump({"version": _PERSIST_VERSION, "entries": entries,
+                     "graphs": {}}, f)
+
+    cache = SharedPlanCache()
+    manifest = cache.load(path)
+    assert manifest["mesh_skipped"] == 1
+    assert manifest["entries"] == 1
+    kept = {key for (kind, key), _ in cache.items()
+            if kind == "sharddispatch"}
+    assert kept == {("k1", "fp1", 1)}
+    # the survivor's descriptor arrays were re-uploaded to the device
+    (value,) = [v for (kind, _), v in cache.items()
+                if kind == "sharddispatch"]
+    import jax
+    assert isinstance(value.arrays["sp_a"], jax.Array)
+
+
 # ----------------------------------------------------------- lazy densify
 def test_structure_entry_densifies_only_for_dense_queue():
     """An all-sparse plan must never materialize the dense adjacency; the
