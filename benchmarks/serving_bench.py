@@ -19,14 +19,21 @@ interpret mode on CPU):
    per graph in the cache (the GraphAGILE compile-once/serve-many gate)
    while still matching the per-request results.
 
+``--scenario chaos`` (own CI lane) runs the seeded degraded-mode drill
+instead: poison-request isolation, transient-fault recovery, the
+compiled→eager fallback, drift-churn breaker bounds, and corrupt-snapshot
+cold starts — every gate deterministic under ``--seed``.
+
 Emits a machine-readable JSON blob (p50/p95 latency, cache hit rate,
-launches per request, plans per graph, drift outcome) for CI trend
-tracking.
+launches per request, plans per graph, drift outcome, chaos gates) for CI
+trend tracking.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import tempfile
 import time
 
 import jax.numpy as jnp
@@ -35,8 +42,9 @@ import numpy as np
 from repro.core import DynasparseEngine, SparseCOO
 from repro.kernels import ops
 from repro.models import gnn
-from repro.serving import (ServingConfig, ServingEngine, SharedPlanCache,
-                           SketchConfig)
+from repro.serving import (FaultInjector, InjectedFault, ServingConfig,
+                           ServingEngine, SharedPlanCache, SketchConfig)
+from repro.serving.faults import KNOWN_SITES
 
 
 def _fixed_graph(n: int = 128, avg_deg: int = 4, seed: int = 5) -> SparseCOO:
@@ -181,38 +189,282 @@ def run(requests: int = 32, max_batch: int = 8, model: str = "GCN",
     return out
 
 
+# --------------------------------------------------------------- chaos lane
+def _chaos_serving(adj, params, model, *, faults=None, max_batch=4,
+                   max_retries=2, drift=None, breaker=(3, 60.0, 30.0)):
+    """Serving stack configured for the bit-equality gates: tile-aligned
+    widths come from the caller, ``activation_skip`` off (the block-skip
+    route's capacity decision is global, i.e. composition-dependent)."""
+    eng = DynasparseEngine(tile_m=32, tile_n=8, literal=True,
+                           cache=SharedPlanCache())
+    srv = ServingEngine(model, params, engine=eng, config=ServingConfig(
+        max_batch=max_batch, sketch=SketchConfig(threshold=drift),
+        activation_skip=False, max_retries=max_retries,
+        breaker_threshold=breaker[0], breaker_window_s=breaker[1],
+        breaker_cooldown_s=breaker[2], faults=faults))
+    srv.register_graph("bench", adj)
+    return srv
+
+
+def run_chaos(requests: int = 32, max_batch: int = 8, model: str = "GCN",
+              feat: int = 24, hidden: int = 16, seed: int = 7) -> dict:
+    """Seeded degraded-mode drill.  Gates (all must hold for ``--check``):
+
+    - LIVENESS: every request resolves (logits or structured error).
+    - ISOLATION: the failed set is EXACTLY the poisoned set; every other
+      request's logits are bit-identical to the fault-free reference.
+    - DEGRADATION: a compiled-program fault serves its batch eagerly
+      (``degraded_batches``) with zero caller-visible errors.
+    - BOUNDED CHURN: oscillating density trips the breaker; compile
+      invalidations stay bounded instead of growing with traffic.
+    - DURABILITY: a truncated snapshot degrades to a logged cold start.
+    """
+    adj = _fixed_graph()
+    n = adj.shape[0]
+    rng = np.random.default_rng(seed)
+    # hidden/out widths are multiples of tile_n (8) so no kernel column
+    # tile straddles a request boundary — per-request bit-independence
+    params = gnn.init_params(model, feat, hidden, hidden)
+    batches = [rng.normal(size=(n, feat)).astype(np.float32)
+               for _ in range(requests)]
+    warm_h = [rng.normal(size=(n, feat)).astype(np.float32)
+              for _ in range(max_batch)]
+
+    def warm(srv):
+        # identical warmup burst in every run: the plan is global and
+        # density-dependent, so bit-equality needs the program pinned
+        # from the identical operand before any chaos fires
+        srv.serve(("bench", h) for h in warm_h)
+
+    out = {"model": model, "requests": requests, "max_batch": max_batch,
+           "seed": seed}
+
+    # ---- fault-free reference (pre-warmed)
+    srv = _chaos_serving(adj, params, model, max_batch=max_batch)
+    warm(srv)
+    t0 = time.perf_counter()
+    ref = [np.asarray(z) for z in
+           srv.serve(("bench", h) for h in batches)]
+    ref_wall = time.perf_counter() - t0
+    ref_pct = srv.stats.latency_percentiles()
+    out["reference"] = {"wall_s": ref_wall,
+                        "latency": {"p50": ref_pct["p50"],
+                                    "p95": ref_pct["p95"]}}
+    srv.close()
+
+    # ---- isolation: poison requests + transient batch faults + straggler
+    poisons = sorted(rng.choice(requests, size=3, replace=False).tolist())
+    fi = (FaultInjector(seed=seed)
+          .arm("dispatch", rate=1.0, count=2, after=1)   # skip warm batch
+          .arm("dispatch", delay_s=0.05, count=1, after=3))
+    for p in poisons:        # warmup burst consumed request ids 0..max_batch-1
+        fi.arm("request", rate=1.0, match=f"req:{max_batch + p};")
+    srv = _chaos_serving(adj, params, model, max_batch=max_batch, faults=fi)
+    warm(srv)
+    recorded_warm = len(srv.stats.requests)
+    t0 = time.perf_counter()
+    outs = srv.serve((("bench", h) for h in batches), return_exceptions=True)
+    wall = time.perf_counter() - t0
+    failed = {i for i, z in enumerate(outs) if isinstance(z, Exception)}
+    bit_equal = all(
+        isinstance(outs[i], InjectedFault) if i in failed
+        else np.array_equal(np.asarray(outs[i]), ref[i])
+        for i in range(requests))
+    pct = srv.stats.latency_percentiles()
+    # the ISSUE gate: non-faulted requests' p50 within budget even while
+    # the ladder is bisecting/retrying around the poison requests
+    ok_lat = [r.latency for r in srv.stats.requests[recorded_warm:]
+              if r.error is None]
+    p50_ok = float(np.percentile(ok_lat, 50)) if ok_lat else 0.0
+    p50_budget = max(5.0 * out["reference"]["latency"]["p50"], 1.0)
+    out["isolation"] = {
+        "poisoned": poisons,
+        "failed": sorted(failed),
+        "all_resolved": len(outs) == requests,
+        "all_recorded": len(srv.stats.requests) - recorded_warm == requests,
+        "failed_set_is_poison_set": failed == set(poisons),
+        "neighbours_bit_equal": bool(bit_equal),
+        "quarantined": srv.stats.quarantined,
+        "bisections": srv.stats.bisections,
+        "retries": srv.stats.retries,
+        "injected": fi.summary(),
+        "wall_s": wall,
+        "latency": {"p50": pct["p50"], "p95": pct["p95"]},
+        "non_faulted_p50": p50_ok,
+        "p50_budget_s": p50_budget,
+        "p50_within_budget": p50_ok <= p50_budget,
+    }
+    srv.close()
+
+    # ---- liveness: every instrumented serving site, one at a time + mixed
+    live_n = min(8, requests)
+    refs_live = [np.asarray(gnn.run_reference(model, adj, jnp.asarray(h),
+                                              params))
+                 for h in batches[:live_n]]
+    site_results = {}
+    sites = sorted(s for s in KNOWN_SITES if not s.startswith("snapshot"))
+    for site in sites + ["mixed"]:
+        if site == "mixed":
+            fi = (FaultInjector(seed=seed)
+                  .arm("plan", rate=0.3, count=2)
+                  .arm("execute", rate=0.3, count=2)
+                  .arm("compiled", rate=1.0, count=1)
+                  .arm("request", rate=1.0, match="req:2;"))
+        else:
+            fi = FaultInjector(seed=seed).arm(site, rate=1.0, count=2)
+        srv = _chaos_serving(adj, params, model, max_batch=max_batch,
+                             faults=fi)
+        # no pre-warm: the warmup plan/lower/pack probes must be hit too;
+        # successes are gated against the eager reference (a mid-warmup
+        # fault legitimately re-plans, so bit-equality is the isolation
+        # run's gate, numeric correctness is this one's)
+        outs = srv.serve((("bench", h) for h in batches[:live_n]),
+                         return_exceptions=True)
+        errs = sum(isinstance(z, Exception) for z in outs)
+        correct = all(
+            isinstance(z, Exception)
+            or float(np.max(np.abs(np.asarray(z) - refs_live[i]))) < 1e-3
+            for i, z in enumerate(outs))
+        site_results[site] = {
+            "resolved": len(outs), "errors": errs,
+            "recorded": len(srv.stats.requests),
+            "fired": fi.total_fired, "correct": correct,
+            "live": len(outs) == live_n
+                    and len(srv.stats.requests) == live_n and correct,
+        }
+        srv.close()
+    out["liveness"] = {
+        "requests_per_site": live_n,
+        "sites": site_results,
+        "all_sites_live": all(r["live"] for r in site_results.values()),
+    }
+
+    # ---- degradation: compiled-program fault → eager fallback, no errors
+    fi = FaultInjector(seed=seed).arm("compiled", rate=1.0, count=1, after=1)
+    srv = _chaos_serving(adj, params, model, max_batch=max_batch, faults=fi)
+    warm(srv)
+    outs = srv.serve((("bench", h) for h in batches), return_exceptions=True)
+    errs = [z for z in outs if isinstance(z, Exception)]
+    max_err = max(float(np.max(np.abs(np.asarray(z) - r)))
+                  for z, r in zip(outs, ref))
+    out["degraded"] = {
+        "degraded_batches": srv.stats.degraded_batches,
+        "errors": len(errs),
+        # the eager fallback replans on the live operand → FP tolerance,
+        # not bit-equality, for the degraded batch
+        "max_abs_err_vs_reference": max_err,
+        "matches_reference": max_err < 1e-3,
+    }
+    srv.close()
+
+    # ---- bounded churn: oscillating density vs the circuit breaker
+    sparse_h = (rng.normal(size=(n, feat)) *
+                (rng.uniform(size=(n, feat)) < 0.03)).astype(np.float32)
+    dense_h = rng.normal(size=(n, feat)).astype(np.float32)
+    flips = [sparse_h if i % 2 == 0 else dense_h for i in range(12)]
+    srv = _chaos_serving(adj, params, model, max_batch=1, drift=0.25,
+                         breaker=(2, 60.0, 60.0))
+    outs = srv.serve(("bench", h) for h in flips)
+    churn_err = max(
+        float(np.max(np.abs(np.asarray(z) - np.asarray(
+            gnn.run_reference(model, adj, jnp.asarray(h), params)))))
+        for h, z in zip(flips, outs))
+    out["breaker"] = {
+        "flips": len(flips),
+        "breaker_trips": srv.stats.breaker_trips,
+        "compile_invalidations": srv.stats.compile_invalidations,
+        "invalidations_bounded": srv.stats.compile_invalidations <= 2,
+        "max_abs_err_vs_reference": churn_err,
+        "matches_reference": churn_err < 1e-3,
+    }
+    srv.close()
+
+    # ---- durability: truncated snapshot must cold-start, not crash
+    cache = SharedPlanCache()
+    eng = DynasparseEngine(tile_m=32, tile_n=8, literal=True, cache=cache)
+    gnn.run_inference(model, eng, adj, jnp.asarray(batches[0]), params)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "plans.pkl")
+        cache.save(path)
+        blob = open(path, "rb").read()
+        with open(path, "wb") as f:
+            f.write(blob[:len(blob) // 2])
+        fresh = SharedPlanCache()
+        manifest = fresh.load(path)
+        out["snapshot"] = {
+            "cold_start": bool(manifest.get("cold_start")),
+            "snapshot_errors": fresh.stats.snapshot_errors,
+            "error": manifest.get("error"),
+        }
+
+    out["ok"] = bool(
+        out["isolation"]["all_resolved"]
+        and out["isolation"]["all_recorded"]
+        and out["isolation"]["failed_set_is_poison_set"]
+        and out["isolation"]["neighbours_bit_equal"]
+        and out["isolation"]["quarantined"] == len(poisons)
+        and out["isolation"]["p50_within_budget"]
+        and out["liveness"]["all_sites_live"]
+        and out["degraded"]["degraded_batches"] >= 1
+        and out["degraded"]["errors"] == 0
+        and out["degraded"]["matches_reference"]
+        and out["breaker"]["breaker_trips"] >= 1
+        and out["breaker"]["invalidations_bounded"]
+        and out["breaker"]["matches_reference"]
+        and out["snapshot"]["cold_start"]
+        and out["snapshot"]["snapshot_errors"] >= 1)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--model", default="GCN")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--scenario", choices=("core", "chaos", "all"),
+                    default="all",
+                    help="core = throughput/drift scenarios, chaos = the "
+                         "degraded-mode drill (own CI lane)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless micro-batching reduced "
-                         "launches/request and the drift replan fired (CI)")
+                         "launches/request, the drift replan fired, and "
+                         "(chaos lane) every degraded-mode gate held (CI)")
     args = ap.parse_args()
 
-    res = run(requests=args.requests, max_batch=args.max_batch,
-              model=args.model)
+    res = {}
+    if args.scenario in ("core", "all"):
+        res = run(requests=args.requests, max_batch=args.max_batch,
+                  model=args.model)
+    if args.scenario in ("chaos", "all"):
+        res["chaos"] = run_chaos(requests=args.requests,
+                                 max_batch=max(2, args.max_batch // 2),
+                                 model=args.model, seed=args.seed)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"[serving_bench] wrote {args.out}")
-    print(json.dumps({k: res[k] for k in
-                      ("launch_reduction", "per_request", "micro_batched",
-                       "mixed_batch", "density_drift")}, indent=2))
+    shown = [k for k in ("launch_reduction", "per_request", "micro_batched",
+                         "mixed_batch", "density_drift", "chaos")
+             if k in res]
+    print(json.dumps({k: res[k] for k in shown}, indent=2))
     if args.check:
-        ok = (res["launch_reduction"] > 1.0
-              and res["density_drift"]["replan_triggered"]
-              and res["density_drift"]["matches_reference"]
-              and res["micro_batched"]["max_abs_err_vs_per_request"] < 1e-3
-              # single-plan serving: mixed batch sizes leave ONE plan entry
-              # per graph, trigger zero drift replans, and still reduce
-              # per-request pallas launches
-              and res["mixed_batch"]["plans_per_graph"] == 1
-              and res["mixed_batch"]["replans"] == 0
-              and res["mixed_batch"]["max_abs_err_vs_per_request"] < 1e-3
-              and (res["mixed_batch"]["launches_per_request"]
-                   < res["per_request"]["launches_per_request"]))
+        ok = True
+        if args.scenario in ("core", "all"):
+            ok = (res["launch_reduction"] > 1.0
+                  and res["density_drift"]["replan_triggered"]
+                  and res["density_drift"]["matches_reference"]
+                  and res["micro_batched"]["max_abs_err_vs_per_request"] < 1e-3
+                  # single-plan serving: mixed batch sizes leave ONE plan
+                  # entry per graph, trigger zero drift replans, and still
+                  # reduce per-request pallas launches
+                  and res["mixed_batch"]["plans_per_graph"] == 1
+                  and res["mixed_batch"]["replans"] == 0
+                  and res["mixed_batch"]["max_abs_err_vs_per_request"] < 1e-3
+                  and (res["mixed_batch"]["launches_per_request"]
+                       < res["per_request"]["launches_per_request"]))
+        if ok and args.scenario in ("chaos", "all"):
+            ok = res["chaos"]["ok"]
         if not ok:
             raise SystemExit("[serving_bench] acceptance check FAILED")
         print("[serving_bench] acceptance check passed")

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import os
 import pickle
 import time
@@ -321,12 +322,27 @@ SNAPSHOT_ENV = "REPRO_CALIBRATION_PATH"
 
 def save_snapshot(path: str, models: dict[tuple, CalibratedModel]) -> None:
     """Write a calibration snapshot (the CI cache artifact).  Plain pickle
-    of {calibration_key: CalibratedModel} — every field is a host scalar."""
+    of {calibration_key: CalibratedModel} — every field is a host scalar.
+
+    Atomic: pickled to a same-directory temp file then ``os.replace``d into
+    place, so a crash mid-save can never leave a truncated snapshot for the
+    next process to choke on (it keeps the previous snapshot instead)."""
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
-    with open(path, "wb") as f:
-        pickle.dump({"version": 1, "models": dict(models)}, f)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            pickle.dump({"version": 1, "models": dict(models)}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def load_snapshot(path: str) -> dict[tuple, CalibratedModel]:
@@ -360,8 +376,15 @@ def get_calibrated(cache, base: HardwareModel, *, block: int = 8,
                 m = load_snapshot(path).get(key)
                 if m is not None:
                     return m
-            except Exception:
-                pass   # unreadable snapshot: fall through to measuring
+            except Exception as exc:
+                # unreadable (corrupt/truncated/wrong-version) snapshot:
+                # a logged cold start — fall through to measuring.  The
+                # counter makes the degradation observable instead of a
+                # silently slower restart.
+                cache.stats.snapshot_errors += 1
+                logging.getLogger(__name__).warning(
+                    "calibration snapshot %s unusable (%s: %s) — "
+                    "re-measuring", path, type(exc).__name__, exc)
         m = calibrate(base, block=block, dtype=dtype, interpret=interpret,
                       repeats=repeats)
         if path:

@@ -260,14 +260,19 @@ def _spmm_dense_y_triples(tasks, part, stripes, offsets, R: int, C: int,
 
 def build_dispatch(part, stq, dtq, stripes: dict[int, "BlockCSR"],
                    *, block: int, eps: float = 0.0,
-                   fingerprint: str = "") -> CompiledDispatch | None:
+                   fingerprint: str = "",
+                   faults: object = None) -> CompiledDispatch | None:
     """Lower a planned kernel into a :class:`CompiledDispatch`.
 
     O(nnz blocks) of VECTORIZED numpy + one device upload, paid once per
     (structure, assignment, geometry); returns ``None`` when the canvas
     geometry cannot take the in-place index maps (caller falls back to the
-    per-task path, exactly like the eager batched dispatch).
+    per-task path, exactly like the eager batched dispatch).  ``faults`` is
+    the optional fault injector probed at the ``lower`` site — descriptor
+    lowering is an instrumented degradation path.
     """
+    if faults is not None:
+        faults.probe("lower", detail=f"dispatch:{part.name}")
     slots = canvas_slots(part, block)
     if slots is None:
         return None
@@ -571,7 +576,8 @@ def activation_budgets(x, part, block: int, *, eps: float = 0.0,
 
 
 def build_activation_dispatch(part, stq, dtq, *, block: int, capacity,
-                              eps: float = 0.0, fingerprint: str = ""
+                              eps: float = 0.0, fingerprint: str = "",
+                              faults: object = None
                               ) -> ActivationDispatch | None:
     """Lower an activation-side plan into capacity-slot descriptor arrays.
 
@@ -587,6 +593,8 @@ def build_activation_dispatch(part, stq, dtq, *, block: int, capacity,
     host pack emits, so sums are bit-identical.  Returns ``None`` for
     canvas geometries the in-place index maps cannot take.
     """
+    if faults is not None:
+        faults.probe("pack", detail=f"act:{part.name}")
     slots = canvas_slots(part, block)
     if slots is None:
         return None

@@ -122,8 +122,15 @@ class DynasparseEngine:
         sketch_rows: int = 256,
         calibration: object = "auto",
         mesh: object = None,
+        faults: object = None,
     ):
         self.hw = hw
+        # optional repro.serving.faults.FaultInjector (duck-typed: anything
+        # with .probe(site, detail)) consulted at the instrumented sites —
+        # plan / lower / pack / execute.  None (the default) keeps every
+        # probe a no-op; the serving layer threads its configured injector
+        # through here so chaos scenarios exercise the engine's real paths.
+        self.faults = faults
         # 1-D ("data",) jax mesh → sharded plan/compile/execute: the
         # Analyzer's STQ/DTQ split becomes a two-level (device, queue)
         # placement and compiled kernels run under shard_map, one banded
@@ -207,6 +214,8 @@ class DynasparseEngine:
     def plan(self, x, y, name: str = "kernel") -> KernelPlan:
         """Preprocessing phase: densities → task grid → Analyzer → simulated
         schedule.  Cached on the sparsity structure for ``SparseCOO`` x."""
+        if self.faults is not None:
+            self.faults.probe("plan", detail=name)
         y = jnp.asarray(y)
         if isinstance(x, SparseCOO):
             M, K = x.shape
@@ -307,6 +316,8 @@ class DynasparseEngine:
         K = x.shape[1]
 
         def _build() -> StructureEntry:
+            if self.faults is not None:
+                self.faults.probe("pack", detail=f"stripes:{nrt}")
             rows = np.asarray(x.rows)
             cols = np.asarray(x.cols)
             vals = np.asarray(x.vals)
@@ -358,7 +369,8 @@ class DynasparseEngine:
             (plan.struct_key, digest),
             lambda: _dispatch.build_dispatch(
                 plan.part, plan.stq, plan.dtq, entry.stripes,
-                block=self.block, eps=self.eps, fingerprint=digest))
+                block=self.block, eps=self.eps, fingerprint=digest,
+                faults=self.faults))
 
     def sharded_dispatch_for(
             self, plan: KernelPlan,
@@ -381,7 +393,8 @@ class DynasparseEngine:
             (plan.struct_key, digest, self.n_devices),
             lambda: _shard_exec.build_sharded_dispatch(
                 plan.part, plan.stq, plan.dtq, entry.stripes, plan.placement,
-                block=self.block, eps=self.eps, fingerprint=digest))
+                block=self.block, eps=self.eps, fingerprint=digest,
+                faults=self.faults))
 
     def activation_dispatch_for(
             self, plan: KernelPlan, x, *, capacity=None,
@@ -424,7 +437,8 @@ class DynasparseEngine:
             (digest, cap_key, self.eps),
             lambda: _dispatch.build_activation_dispatch(
                 plan.part, plan.stq, plan.dtq, block=self.block,
-                capacity=capacity, eps=self.eps, fingerprint=digest))
+                capacity=capacity, eps=self.eps, fingerprint=digest,
+                faults=self.faults))
 
     def compiled_operands(
             self, plan: KernelPlan,
@@ -462,6 +476,8 @@ class DynasparseEngine:
         served from the cache and the whole kernel runs as ONE jitted call —
         zero per-request host work beyond dict lookups.  Kernels the compiler
         declines fall back to the eager batched (or per-task) path."""
+        if self.faults is not None:
+            self.faults.probe("execute", detail=plan.part.name)
         y = jnp.asarray(y)
         if self.literal:
             interpret = (_ops.default_interpret()

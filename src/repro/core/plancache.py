@@ -163,6 +163,10 @@ class CacheStats:
     # process replays ZERO measurements.
     calib_builds: int = 0       # CalibratedModel fits (compute() ran)
     calib_hits: int = 0         # models served from a cached calibration
+    # snapshot robustness: unusable persistence artifacts (corrupt/truncated/
+    # wrong-version plan-cache or calibration snapshots) that degraded to a
+    # logged cold start instead of crashing the restart path
+    snapshot_errors: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)

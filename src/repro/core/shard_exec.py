@@ -88,7 +88,8 @@ def _band_tasks(tasks, placement, d):
 
 def build_sharded_dispatch(part, stq, dtq, stripes, placement,
                            *, block: int, eps: float = 0.0,
-                           fingerprint: str = "") -> ShardedDispatch | None:
+                           fingerprint: str = "",
+                           faults: object = None) -> ShardedDispatch | None:
     """Lower a device-placed plan into a :class:`ShardedDispatch`.
 
     Same O(nnz blocks) vectorized-numpy cost as
@@ -97,6 +98,8 @@ def build_sharded_dispatch(part, stq, dtq, stripes, placement,
     take the in-place index maps (caller falls back to the eager path,
     which is placement-agnostic and already correct).
     """
+    if faults is not None:
+        faults.probe("lower", detail=f"shard:{part.name}")
     slots = _dispatch.canvas_slots(part, block)
     if slots is None:
         return None

@@ -1,9 +1,14 @@
-"""Failure & straggler detection hooks for the launcher.
+"""Failure & straggler detection hooks for the launcher AND the serving
+dispatch workers.
 
 This is the host-side control plane: it never enters jitted code.  On a real
 cluster each host runs a heartbeat thread; the coordinator aggregates and
-triggers the elastic re-mesh (distributed/elastic.py).  The detector logic is
-fully testable off-cluster.
+triggers the elastic re-mesh (distributed/elastic.py).  In-process, the
+serving layer runs one :class:`FaultMonitor` over its dispatch worker(s):
+every micro-batch heartbeats with its step time, and
+``ServingEngine.dispatch_stats()["health"]`` surfaces :meth:`snapshot` — the
+liveness/straggler view an operator (or the chaos bench) reads.  The
+detector logic is fully testable off-cluster.
 """
 from __future__ import annotations
 
@@ -32,12 +37,21 @@ class FaultMonitor:
                  straggler_factor: float = 2.0, window: int = 16):
         self.timeout = timeout
         self.straggler_factor = straggler_factor
+        self.window = window
         now = time.monotonic()
         self.hosts = {h: HostState(now, deque(maxlen=window)) for h in hosts}
+
+    def ensure_host(self, host: str, now: float | None = None) -> None:
+        """Start tracking ``host`` if it is new (elastic join / a serving
+        engine growing its dispatch-worker pool)."""
+        if host not in self.hosts:
+            now = time.monotonic() if now is None else now
+            self.hosts[host] = HostState(now, deque(maxlen=self.window))
 
     def heartbeat(self, host: str, step_time: float | None = None,
                   now: float | None = None) -> None:
         now = time.monotonic() if now is None else now
+        self.ensure_host(host, now=now)
         st = self.hosts[host]
         st.last_heartbeat = now
         if step_time is not None:
@@ -67,3 +81,22 @@ class FaultMonitor:
     def healthy_hosts(self, now: float | None = None) -> list[str]:
         dead = set(self.dead_hosts(now=now)) | set(self.stragglers())
         return [h for h in self.hosts if h not in dead]
+
+    def snapshot(self, now: float | None = None) -> dict:
+        """One JSON-able view of the monitored fleet: per-host heartbeat age
+        and rolling median step time, plus the dead/straggler/healthy
+        classification — the ``dispatch_stats()["health"]`` surface."""
+        now = time.monotonic() if now is None else now
+        return {
+            "hosts": {
+                h: {
+                    "heartbeat_age_s": now - st.last_heartbeat,
+                    "median_step_s": self._median(st.step_times),
+                    "steps": len(st.step_times),
+                }
+                for h, st in self.hosts.items()
+            },
+            "dead": self.dead_hosts(now=now),
+            "stragglers": self.stragglers(),
+            "healthy": self.healthy_hosts(now=now),
+        }

@@ -155,6 +155,7 @@ class CompiledModel:
     n_sparse: int
     n_act: int = 0                # kernels on the capacity block-skip route
     stats: object | None = None   # CacheStats receiving call accounting
+    faults: object | None = None  # FaultInjector probed at "compiled"
     calls: int = 0
     traces: int = 0               # distinct input signatures (jit retraces)
     # per-activation-kernel telemetry of the LAST call: stored/capacity/
@@ -180,6 +181,12 @@ class CompiledModel:
                             meta=list(self.report.meta))
 
     def __call__(self, h) -> jax.Array:
+        # the whole-model compiled-execute site: a fault here exercises the
+        # serving layer's compiled -> eager degradation ladder (the probe
+        # runs BEFORE any stats are credited, so a failed call never skews
+        # the steady-state hit accounting)
+        if self.faults is not None:
+            self.faults.probe("compiled", detail=self.model)
         h = jnp.asarray(h)
         sig = (tuple(h.shape), str(h.dtype))
         new = sig not in self._seen
@@ -328,7 +335,7 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
         n_kernels=len(records),
         n_sparse=sum(1 for k, _ in records if k in ("sparse", "shard")),
         n_act=sum(1 for k, _ in records if k == "act"),
-        stats=engine.cache.stats)
+        stats=engine.cache.stats, faults=engine.faults)
 
 
 def run_inference(model: str, engine: DynasparseEngine, adj, h, params):

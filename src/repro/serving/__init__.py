@@ -3,17 +3,22 @@ multi-graph plan cache.
 
     queue ──► density sketch ──► SharedPlanCache ──► batched dispatch
 
-See ``repro.serving.engine`` for the request path and ``repro.serving.cache``
-for the process-wide cache + persistence.
+See ``repro.serving.engine`` for the request path (including the
+degraded-mode ladder: compiled → eager → bisected per-request retry →
+quarantine), ``repro.serving.cache`` for the process-wide cache +
+persistence, and ``repro.serving.faults`` for the seeded chaos injector.
 """
 from repro.serving.cache import (GraphKey, SharedPlanCache, get_shared_cache,
                                  set_shared_cache)
 from repro.serving.engine import (RequestStats, ServingConfig, ServingEngine,
                                   ServingStats, batched_mm, stacked_transport)
+from repro.serving.faults import (DeadlineExceeded, FaultInjector,
+                                  InjectedFault)
 from repro.serving.sketch import SketchConfig
 
 __all__ = [
     "GraphKey", "SharedPlanCache", "get_shared_cache", "set_shared_cache",
     "RequestStats", "ServingConfig", "ServingEngine", "ServingStats",
     "batched_mm", "stacked_transport", "SketchConfig",
+    "DeadlineExceeded", "FaultInjector", "InjectedFault",
 ]

@@ -20,6 +20,8 @@ GraphAGILE "compile ahead of execution" property across process lifetimes.
 from __future__ import annotations
 
 import dataclasses
+import logging
+import os
 import pickle
 import threading
 from typing import Iterable
@@ -27,6 +29,8 @@ from typing import Iterable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+logger = logging.getLogger(__name__)
 
 from repro.core.dispatch import CompiledDispatch
 from repro.core.plancache import PlanCache, StructureEntry, key_mentions
@@ -108,10 +112,15 @@ class SharedPlanCache(PlanCache):
     """
 
     def __init__(self, capacity: int = 4096,
-                 max_bytes: int | None = 256 * 1024 * 1024):
+                 max_bytes: int | None = 256 * 1024 * 1024,
+                 faults: object = None):
         super().__init__(capacity=capacity, max_bytes=max_bytes)
         self._lock = threading.RLock()
         self._graphs: dict[str, GraphKey] = {}   # graph_id -> key
+        # optional repro.serving.faults.FaultInjector probed at the
+        # snapshot_save / snapshot_load sites (chaos-testing the restart
+        # path); assignable after construction too
+        self.faults = faults
 
     # ----------------------------------------------------- locked accessors
     # The get-or-compute methods are locked as a WHOLE (not just the
@@ -233,6 +242,12 @@ class SharedPlanCache(PlanCache):
 
         Device arrays are converted to host numpy; entry order (LRU) is
         preserved.  Returns a small manifest (entry count, bytes) for logs.
+
+        The write is ATOMIC: the payload is pickled to a same-directory
+        temp file and moved into place with ``os.replace``, so a process
+        crashing mid-save (power loss, OOM kill, injected fault) can never
+        leave a truncated snapshot where the next restart would trip over
+        it — the previous snapshot, if any, survives intact.
         """
         with self._lock:
             entries = [((kind, key), _to_host(value))
@@ -244,8 +259,21 @@ class SharedPlanCache(PlanCache):
             }
             manifest = {"entries": len(entries), "bytes": self.bytes_used,
                         "graphs": len(self._graphs)}
-        with open(path, "wb") as f:
-            pickle.dump(payload, f)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                if self.faults is not None:
+                    self.faults.probe("snapshot_save", detail=path)
+                pickle.dump(payload, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         return manifest
 
     def load(self, path: str) -> dict:
@@ -254,7 +282,16 @@ class SharedPlanCache(PlanCache):
         Loaded entries land in saved LRU order *below* anything already
         cached (existing entries stay most-recent).  Stats are not restored
         — hit/miss counting starts fresh, which is what a restarted serving
-        process wants to observe.
+        process wants to observe — except ``snapshot_errors``, which counts
+        against THIS process.
+
+        An unusable snapshot — truncated, corrupt, wrong pickle, or a
+        version this build does not speak — must never crash the serving
+        startup path it exists to accelerate: it degrades to a logged COLD
+        START.  The cache is left exactly as it was, ``snapshot_errors`` is
+        incremented, and the returned manifest carries the reason under
+        ``"error"`` (version mismatches keep their explicit wanted/got
+        message there) with ``cold_start=True``.
 
         Live registrations win over the snapshot: a graph id already
         registered in THIS process keeps its mapping, and snapshot entries
@@ -263,13 +300,30 @@ class SharedPlanCache(PlanCache):
         resurrect a stale ``CompiledDispatch`` (old adjacency's descriptors
         and block payloads) under the superseded content key.
         """
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
-        if payload.get("version") != _PERSIST_VERSION:
-            raise ValueError(
-                f"unsupported plan-cache snapshot version "
-                f"{payload.get('version')!r} (want {_PERSIST_VERSION})")
-        snap_graphs: dict[str, GraphKey] = payload["graphs"]
+        try:
+            if self.faults is not None:
+                self.faults.probe("snapshot_load", detail=path)
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+            if not isinstance(payload, dict):
+                raise ValueError(
+                    f"plan-cache snapshot payload is "
+                    f"{type(payload).__name__}, not a dict")
+            if payload.get("version") != _PERSIST_VERSION:
+                raise ValueError(
+                    f"unsupported plan-cache snapshot version "
+                    f"{payload.get('version')!r} (want {_PERSIST_VERSION})")
+            snap_graphs: dict[str, GraphKey] = payload["graphs"]
+            snap_entries = list(payload["entries"])
+        except Exception as exc:
+            with self._lock:
+                self.stats.snapshot_errors += 1
+            logger.warning(
+                "plan-cache snapshot %s unusable (%s: %s) — cold start",
+                path, type(exc).__name__, exc)
+            return {"entries": 0, "stale_skipped": 0, "mesh_skipped": 0,
+                    "graphs": 0, "cold_start": True,
+                    "error": f"{type(exc).__name__}: {exc}"}
         with self._lock:
             # fingerprints the live registry has superseded — unless some
             # current (or non-conflicting snapshot) id still maps to them
@@ -285,7 +339,7 @@ class SharedPlanCache(PlanCache):
             self.bytes_used = 0
             n_live_devices = len(jax.devices())
             loaded = skipped = mesh_skipped = 0
-            for (kind, key), value in payload["entries"]:
+            for (kind, key), value in snap_entries:
                 if any(key_mentions(key, fp) for fp in stale):
                     skipped += 1
                     continue
@@ -310,7 +364,7 @@ class SharedPlanCache(PlanCache):
                 self._graphs.setdefault(gid, key)
             return {"entries": loaded, "stale_skipped": skipped,
                     "mesh_skipped": mesh_skipped,
-                    "graphs": len(snap_graphs)}
+                    "graphs": len(snap_graphs), "cold_start": False}
 
 
 # --------------------------------------------------------------- singleton

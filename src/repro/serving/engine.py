@@ -29,6 +29,26 @@ coalescing the next burst.  Padding partial batches to ``max_batch`` keeps
 the engine's kernel geometry constant across traffic shapes, so every
 registered graph plans exactly once per distinct model kernel (the
 GraphAGILE compile-once/serve-many overlay property).
+
+Degraded-mode serving (the failure half of the lifecycle)::
+
+    compiled program fails   ──► eager batched fallback (degraded_batches)
+    eager batch fails        ──► bisect into halves (bisections) until the
+                                 poison request fails ALONE
+    single request fails     ──► bounded backoff retries (retries), then
+                                 quarantine (quarantined) — its future
+                                 carries the error, neighbours are served
+                                 bit-identically to a fault-free run
+    batch straggles/wedges   ──► per-request deadline fails the caller with
+                                 DeadlineExceeded (deadline_expired)
+    drift→recompile churn    ──► per-graph circuit breaker pins the
+                                 last-good program through a cooldown
+                                 (breaker_trips)
+
+Fault sites for chaos testing are instrumented throughout (see
+serving/faults.py); the dispatch worker heartbeats a
+``distributed.fault.FaultMonitor`` exposed via
+``dispatch_stats()["health"]``.
 """
 from __future__ import annotations
 
@@ -36,6 +56,7 @@ import asyncio
 import collections
 import concurrent.futures
 import dataclasses
+import threading
 import time
 from typing import Iterable, Sequence
 
@@ -45,8 +66,10 @@ import numpy as np
 
 from repro.core.engine import DynasparseEngine, EngineReport
 from repro.core.primitives import SparseCOO
+from repro.distributed.fault import FaultMonitor
 from repro.models import gnn
 from repro.serving.cache import GraphKey, SharedPlanCache, get_shared_cache
+from repro.serving.faults import DeadlineExceeded, FaultInjector
 from repro.serving.sketch import SketchConfig
 
 
@@ -102,6 +125,31 @@ class ServingConfig:
     # under shard_map.  Requires the host to expose that many devices
     # (``launch.mesh.make_data_mesh`` raises otherwise).
     n_devices: int | None = None
+    # ---- degraded-mode serving (fault tolerance policy) -----------------
+    # Per-request retry budget once a request has been isolated by the
+    # bisection ladder (a failed micro-batch is split in halves until the
+    # poison request fails alone); exhausted retries quarantine the request
+    # — its future resolves with the error, neighbours are untouched.
+    max_retries: int = 1
+    # Base of the exponential backoff between per-request retries (seconds,
+    # slept on the dispatch worker; attempt ``i`` sleeps ``base * 2**i``).
+    retry_backoff_s: float = 0.0
+    # Per-request deadline: ``infer()`` raises ``DeadlineExceeded`` (and
+    # records the request with a structured error) instead of waiting
+    # forever on a straggling batch.  None = no deadline.
+    request_timeout: float | None = None
+    # Circuit breaker over drift→replan→recompile churn: more than
+    # ``breaker_threshold`` compiled-program invalidation events within
+    # ``breaker_window_s`` trips the graph's breaker for
+    # ``breaker_cooldown_s`` — the last-good compiled program is pinned
+    # (drift checks and eager replans suppressed) until the cooldown ends.
+    breaker_threshold: int = 3
+    breaker_window_s: float = 60.0
+    breaker_cooldown_s: float = 30.0
+    # Chaos hook: a seeded ``serving.faults.FaultInjector`` threaded through
+    # the engine, plan cache and compiled programs.  None (default) = every
+    # probe is a no-op attribute check.
+    faults: FaultInjector | None = None
 
 
 @dataclasses.dataclass
@@ -140,6 +188,13 @@ class ServingStats:
     act_overflows: int = 0
     act_skipped_sum: float = 0.0
     act_kernels_last: int = 0
+    # ---- degraded-mode telemetry ----------------------------------------
+    degraded_batches: int = 0   # compiled call failed → eager fallback served
+    bisections: int = 0         # failed micro-batch splits (ladder descents)
+    retries: int = 0            # isolated per-request retry attempts
+    quarantined: int = 0        # requests failed alone after retry budget
+    breaker_trips: int = 0      # drift-churn circuit-breaker activations
+    deadline_expired: int = 0   # requests failed by request_timeout
 
     def record_activation(self, summary: dict) -> None:
         self.activation_batches.append(summary)
@@ -170,6 +225,12 @@ class ServingStats:
                 "compiled_batches": self.compiled_batches,
                 "compile_invalidations": self.compile_invalidations,
                 "errors": self.errors,
+                "degraded_batches": self.degraded_batches,
+                "bisections": self.bisections,
+                "retries": self.retries,
+                "quarantined": self.quarantined,
+                "breaker_trips": self.breaker_trips,
+                "deadline_expired": self.deadline_expired,
                 "mean_batch_size": self.mean_batch_size,
                 "latency": self.latency_percentiles()}
 
@@ -180,6 +241,12 @@ class _Request:
     future: asyncio.Future
     stats: RequestStats
     t_enqueue: float
+    # set once the request's RequestStats has been appended (loop OR worker
+    # thread may get there first — deadline expiry races batch completion)
+    recorded: bool = False
+    # set when the caller stopped waiting (deadline): the dispatcher drops
+    # the request instead of spending a batch slot on an abandoned future
+    abandoned: bool = False
 
 
 def stacked_transport(mm: gnn.MM) -> gnn.MM:
@@ -263,6 +330,7 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.config = config
+        self.faults = config.faults
         if engine is None:
             shared = cache if cache is not None else get_shared_cache()
             if config.n_devices is not None:
@@ -273,10 +341,10 @@ class ServingEngine:
                 # eager execution
                 engine = DynasparseEngine(
                     cache=shared, mesh=make_data_mesh(config.n_devices),
-                    literal=True, batched=True)
+                    literal=True, batched=True, faults=config.faults)
             else:
                 # `is None`, not `or`: an empty PlanCache is falsy (__len__)
-                engine = DynasparseEngine(cache=shared)
+                engine = DynasparseEngine(cache=shared, faults=config.faults)
         elif config.n_devices is not None and (
                 engine.n_devices != config.n_devices):
             raise ValueError(
@@ -286,10 +354,29 @@ class ServingEngine:
         # the sketch policy is applied around each dispatch, never left on a
         # caller-supplied engine (no hidden mutation outliving the serve)
         self.engine = engine
+        if config.faults is not None:
+            # chaos runs own their engine/cache: thread the injector through
+            # so the instrumented plan/lower/pack/execute/snapshot sites fire
+            self.engine.faults = config.faults
+            if isinstance(self.engine.cache, SharedPlanCache):
+                self.engine.cache.faults = config.faults
         self.stats = ServingStats()
+        # RequestStats may be appended from the event loop (deadline expiry)
+        # and the dispatch worker (batch completion) — same request, two
+        # threads.  The lock plus _Request.recorded makes recording
+        # exactly-once.
+        self._stats_lock = threading.RLock()
         self._graphs: dict[str, SparseCOO] = {}
         self._queues: dict[str, collections.deque[_Request]] = {}
         self._draining: set[str] = set()
+        # drift-churn circuit breakers, one per graph:
+        # {events deque[monotonic], open_until, trips}
+        self._breakers: dict[str, dict] = {}
+        # dispatch-worker liveness/straggler surface: every micro-batch
+        # heartbeats with its step time; dispatch_stats()["health"] exposes
+        # the snapshot (distributed/fault.py doubles as the in-process
+        # worker monitor)
+        self._monitor = FaultMonitor(["dispatch-0"], timeout=60.0)
         # compiled whole-model programs, one per (graph, stacked shape,
         # dtype) — with pad_to_max_batch that is ONE program per graph
         self._compiled: dict[tuple, gnn.CompiledModel] = {}
@@ -328,6 +415,16 @@ class ServingEngine:
             "act_overflows": st.act_overflows,
             "act_skipped_ratio_mean": (st.act_skipped_sum / n_act
                                        if n_act else 0.0),
+            # degraded-mode telemetry + snapshot robustness
+            "degraded_batches": st.degraded_batches,
+            "bisections": st.bisections,
+            "retries": st.retries,
+            "quarantined": st.quarantined,
+            "breaker_trips": st.breaker_trips,
+            "deadline_expired": st.deadline_expired,
+            "snapshot_errors": s.snapshot_errors,
+            # dispatch-worker heartbeat/straggler view (FaultMonitor)
+            "health": self._monitor.snapshot(),
         }
 
     def close(self) -> None:
@@ -364,7 +461,13 @@ class ServingEngine:
     # ------------------------------------------------------------ requests
     async def infer(self, graph_id: str, features) -> jnp.ndarray:
         """Submit one request and await its logits.  Concurrent callers on
-        the same graph are coalesced into one micro-batch."""
+        the same graph are coalesced into one micro-batch.
+
+        With ``config.request_timeout`` set, a request that is still
+        unresolved at the deadline raises :class:`DeadlineExceeded` and is
+        recorded with a structured ``RequestStats.error`` — a straggling or
+        wedged batch fails the caller fast instead of hanging ``serve()``.
+        """
         if graph_id not in self._graphs:
             raise KeyError(f"graph {graph_id!r} is not registered")
         loop = asyncio.get_running_loop()
@@ -379,7 +482,25 @@ class ServingEngine:
         if graph_id not in self._draining:
             self._draining.add(graph_id)
             asyncio.ensure_future(self._drain(graph_id))
-        return await req.future
+        timeout = self.config.request_timeout
+        if timeout is None:
+            return await req.future
+        try:
+            # wait_for cancels the future on expiry; _resolve's done() guard
+            # makes a late worker-side resolution a harmless no-op
+            return await asyncio.wait_for(req.future, timeout)
+        except asyncio.TimeoutError:
+            req.abandoned = True
+            now = time.perf_counter()
+            exc = DeadlineExceeded(
+                f"request {stats.request_id} on graph {graph_id!r} missed "
+                f"its {timeout}s deadline")
+            with self._stats_lock:
+                self.stats.deadline_expired += 1
+            self._record_request(req, t0=now, t1=now,
+                                 batch_size=req.stats.batch_size,
+                                 error=f"{type(exc).__name__}: {exc}")
+            raise exc from None
 
     async def _drain(self, graph_id: str) -> None:
         """Per-graph dispatcher: opened by the first request of a burst,
@@ -399,6 +520,9 @@ class ServingEngine:
                     await asyncio.sleep(0)   # let same-tick submitters land
                 batch = [q.popleft()
                          for _ in range(min(len(q), self.config.max_batch))]
+                # deadline-abandoned requests are already recorded/failed —
+                # don't spend batch slots (or fault probes) on them
+                batch = [r for r in batch if not r.abandoned]
                 if batch:
                     try:
                         await loop.run_in_executor(
@@ -436,40 +560,150 @@ class ServingEngine:
         else:
             loop.call_soon_threadsafe(_set)
 
+    def _record_request(self, r: _Request, *, t0: float, t1: float,
+                        batch_size: int, report=None,
+                        error: str | None = None) -> bool:
+        """Append one request's stats exactly once (loop-side deadline
+        expiry and worker-side batch completion may race to record the same
+        request).  Returns False when someone else already recorded it."""
+        with self._stats_lock:
+            if r.recorded:
+                return False
+            r.recorded = True
+            r.stats.batch_size = batch_size
+            r.stats.t_queue = t0 - r.t_enqueue
+            r.stats.t_execute = t1 - t0
+            r.stats.latency = t1 - r.t_enqueue
+            r.stats.report = report
+            r.stats.error = error
+            self.stats.requests.append(r.stats)
+            return True
+
     def _fail_batch(self, batch: list[_Request], t0: float,
                     exc: Exception) -> None:
         """Fail every request of a batch AND record it: failed traffic must
         show up in ``requests``/``mean_batch_size`` (with ``error`` set),
         not silently undercount the stats."""
         t1 = time.perf_counter()
-        self.stats.batches += 1
+        with self._stats_lock:
+            self.stats.batches += 1
         # record EVERY request before resolving ANY future: gather() raises
         # on the first exception, so a caller can observe stats the moment
         # one future fails — interleaving would undercount the batch
         for r in batch:
-            r.stats.batch_size = len(batch)
-            r.stats.t_queue = t0 - r.t_enqueue
-            r.stats.t_execute = t1 - t0
-            r.stats.latency = t1 - r.t_enqueue
-            r.stats.error = f"{type(exc).__name__}: {exc}"
-            self.stats.requests.append(r.stats)
+            self._record_request(r, t0=t0, t1=t1, batch_size=len(batch),
+                                 error=f"{type(exc).__name__}: {exc}")
         for r in batch:
             self._resolve(r.future, exc=exc)
 
-    def _dispatch(self, graph_id: str, batch: list[_Request]) -> None:
-        """Serve one micro-batch: stack → pad → one engine pass → split.
+    # ------------------------------------------------------ circuit breaker
+    def _breaker(self, graph_id: str) -> dict:
+        return self._breakers.setdefault(
+            graph_id,
+            {"events": collections.deque(), "open_until": 0.0, "trips": 0})
 
-        Runs on the single dispatch worker thread (``_drain`` hands it over
-        via ``run_in_executor``); futures are resolved back on their loop.
+    def _breaker_open(self, graph_id: str) -> bool:
+        b = self._breakers.get(graph_id)
+        return b is not None and time.monotonic() < b["open_until"]
+
+    def _breaker_event(self, graph_id: str) -> bool:
+        """Record one compiled-program invalidation event.  Returns True
+        when this event TRIPS the breaker: the caller then pins the
+        last-good program through the cooldown instead of invalidating —
+        bounding drift→replan→recompile churn when inputs oscillate around
+        the drift threshold."""
+        b = self._breaker(graph_id)
+        now = time.monotonic()
+        ev = b["events"]
+        ev.append(now)
+        while ev and now - ev[0] > self.config.breaker_window_s:
+            ev.popleft()
+        if len(ev) >= self.config.breaker_threshold:
+            b["open_until"] = now + self.config.breaker_cooldown_s
+            b["trips"] += 1
+            ev.clear()
+            with self._stats_lock:
+                self.stats.breaker_trips += 1
+            return True
+        return False
+
+    # ------------------------------------------------- degradation ladder
+    def _dispatch(self, graph_id: str, batch: list[_Request]) -> None:
+        """Worker-thread entry for one micro-batch: run the degradation
+        ladder, then heartbeat the dispatch-worker monitor with the step
+        time (the ``dispatch_stats()["health"]`` surface)."""
+        t0 = time.perf_counter()
+        try:
+            batch = [r for r in batch
+                     if not (r.abandoned or r.future.done())]
+            if batch:
+                self._serve_batch(graph_id, batch)
+        finally:
+            self._monitor.heartbeat("dispatch-0",
+                                    step_time=time.perf_counter() - t0)
+
+    def _serve_batch(self, graph_id: str, batch: list[_Request],
+                     attempt: int = 0) -> None:
+        """One rung of the degradation ladder.
+
+        Try the batch as a unit (``_execute_batch`` internally degrades a
+        failed compiled program to the eager path first).  If the whole
+        attempt still fails, bisect: each half retries independently, so a
+        poison request descends the ladder alone while its neighbours are
+        re-served bit-identically (pad_to_max_batch keeps the kernel
+        geometry — and therefore each request's column block — independent
+        of batch composition).  A request failing alone gets
+        ``max_retries`` backoff retries (transient faults recover), then is
+        quarantined: ITS future carries the error, nobody else's.
         """
         t0 = time.perf_counter()
+        try:
+            if self.faults is not None:
+                self.faults.probe("dispatch", detail=graph_id)
+                for r in batch:
+                    # ';' terminates the id so match="req:1;" can never
+                    # poison request 11 as well
+                    self.faults.probe(
+                        "request", detail=f"req:{r.stats.request_id};")
+            self._execute_batch(graph_id, batch, t0)
+            return
+        except Exception as exc:
+            err = exc
+        if len(batch) > 1:
+            with self._stats_lock:
+                self.stats.bisections += 1
+            mid = len(batch) // 2
+            self._serve_batch(graph_id, batch[:mid])
+            self._serve_batch(graph_id, batch[mid:])
+            return
+        if attempt < self.config.max_retries:
+            with self._stats_lock:
+                self.stats.retries += 1
+            if self.config.retry_backoff_s > 0:
+                time.sleep(self.config.retry_backoff_s * (2 ** attempt))
+            self._serve_batch(graph_id, batch, attempt=attempt + 1)
+            return
+        with self._stats_lock:
+            self.stats.quarantined += 1
+        self._fail_batch(batch, t0, err)
+
+    def _execute_batch(self, graph_id: str, batch: list[_Request],
+                       t0: float) -> None:
+        """Serve one micro-batch: stack → pad → one engine pass → split.
+
+        Runs on the single dispatch worker thread; futures are resolved
+        back on their loop.  Raises on failure — the ladder above decides
+        whether to bisect, retry or quarantine.  One degradation happens
+        HERE: a compiled program that fails mid-call falls back to the
+        eager batched path for this batch (``degraded_batches``), keeping
+        the program for the next batch (a transient executor fault should
+        not force a recompile).
+        """
         adj = self._graphs[graph_id]
         k = len(batch)
         widths = [r.features.shape[1] for r in batch]
         if len(set(widths)) != 1:   # model zoo fixes the fan-in per model
-            self._fail_batch(batch, t0, ValueError(
-                f"micro-batch mixes feature widths {widths}"))
-            return
+            raise ValueError(f"micro-batch mixes feature widths {widths}")
         h = (batch[0].features if k == 1
              else jnp.concatenate([r.features for r in batch], axis=1))
         kp = k
@@ -488,27 +722,50 @@ class ServingEngine:
 
         saved = (self.engine.drift_threshold, self.engine.sketch_rows)
         compiled = False
+        degraded = False
         try:
             self.config.sketch.apply(self.engine)
+            breaker_open = self._breaker_open(graph_id)
+            if breaker_open:
+                # cooldown: pin whatever is compiled, suppress eager replans
+                self.engine.drift_threshold = None
             cm_key = (graph_id, tuple(h.shape), str(h.dtype))
             cm = (self._compiled.get(cm_key)
                   if self.config.compile_models else None)
             thr = self.config.sketch.threshold
-            if cm is not None and thr is not None and cm.drifted(
-                    h, thr, max_rows=self.config.sketch.max_rows,
-                    eps=self.engine.eps):
-                # stale compiled program: the eager re-run below replans
-                # drifted kernels, then a fresh program is compiled
-                self._compiled.pop(cm_key, None)
-                self.stats.compile_invalidations += 1
-                cm = None
+            if (cm is not None and thr is not None and not breaker_open
+                    and cm.drifted(
+                        h, thr, max_rows=self.config.sketch.max_rows,
+                        eps=self.engine.eps)):
+                if self._breaker_event(graph_id):
+                    # churn breaker tripped: serve this (and the cooldown's)
+                    # traffic on the last-good program instead of entering
+                    # another replan→recompile cycle
+                    self.engine.drift_threshold = None
+                else:
+                    # stale compiled program: the eager re-run below replans
+                    # drifted kernels, then a fresh program is compiled
+                    self._compiled.pop(cm_key, None)
+                    with self._stats_lock:
+                        self.stats.compile_invalidations += 1
+                    cm = None
             if cm is not None:
-                logits = cm(h)
-                report = cm.fresh_report()
-                compiled = True
-                if cm.last_activation:
-                    self.stats.record_activation(
-                        _activation_summary(cm.last_activation))
+                try:
+                    logits = cm(h)
+                    report = cm.fresh_report()
+                    compiled = True
+                    if cm.last_activation:
+                        with self._stats_lock:
+                            self.stats.record_activation(
+                                _activation_summary(cm.last_activation))
+                except Exception:
+                    # degraded mode: compiled call failed → serve THIS batch
+                    # on the eager batched path (program kept — see above)
+                    degraded = True
+                    self.engine.reset()
+                    logits = gnn.APPLY[self.model](
+                        batched_mm(self.engine), adj, h, self.params)
+                    report = self.engine.report
             else:
                 self.engine.reset()
                 if self.config.compile_models:
@@ -527,35 +784,33 @@ class ServingEngine:
                     logits = gnn.APPLY[self.model](batched_mm(self.engine),
                                                    adj, h, self.params)
                 report = self.engine.report
-        except Exception as exc:
-            # resolve every future — an engine-side error must fail the
-            # batch's requests, never strand them (serve() would deadlock)
-            self._fail_batch(batch, t0, exc)
-            return
         finally:
             self.engine.drift_threshold, self.engine.sketch_rows = saved
         t1 = time.perf_counter()
         out_w = logits.shape[1] // kp
-        self.stats.batches += 1
-        self.stats.compiled_batches += int(compiled)
-        self.stats.batch_reports.append(report)
+        with self._stats_lock:
+            self.stats.batches += 1
+            self.stats.compiled_batches += int(compiled)
+            self.stats.degraded_batches += int(degraded)
+            self.stats.batch_reports.append(report)
         share = report.attributed(k)
         for idx, r in enumerate(batch):
             z = logits[:, idx * out_w:(idx + 1) * out_w]
-            r.stats.batch_size = k
-            r.stats.t_queue = t0 - r.t_enqueue
-            r.stats.t_execute = t1 - t0
-            r.stats.latency = t1 - r.t_enqueue
-            r.stats.report = share
-            self.stats.requests.append(r.stats)
+            self._record_request(r, t0=t0, t1=t1, batch_size=k, report=share)
             self._resolve(r.future, result=z)
 
     # ------------------------------------------------------ sync interface
     def serve(self, requests: Iterable[tuple[str, object]],
-              *, arrival_delay_s: float = 0.0) -> list[jnp.ndarray]:
+              *, arrival_delay_s: float = 0.0,
+              return_exceptions: bool = False) -> list:
         """Blocking convenience: submit ``(graph_id, features)`` pairs as
         concurrent requests, return logits in submission order.  Requests
         submitted in one call coalesce exactly as live traffic would.
+
+        ``return_exceptions=True`` resolves EVERY slot — a failed or
+        deadline-expired request yields its exception object in place of
+        logits instead of aborting the gather (chaos traffic: no submission
+        is ever left unanswered).
 
         Safe to call with or without a running event loop: plain scripts go
         through ``asyncio.run``; when the calling thread already runs a loop
@@ -570,7 +825,8 @@ class ServingEngine:
                 tasks.append(asyncio.ensure_future(self.infer(gid, h)))
                 if arrival_delay_s:
                     await asyncio.sleep(arrival_delay_s)
-            return await asyncio.gather(*tasks)
+            return await asyncio.gather(*tasks,
+                                        return_exceptions=return_exceptions)
 
         try:
             asyncio.get_running_loop()

@@ -201,40 +201,53 @@ def test_serve_inside_running_loop():
 
 
 def test_failed_requests_recorded_in_stats():
-    """The mixed-width error path must fail the futures AND record the
-    requests (with `error` set) — failed traffic may not undercount."""
+    """A mixed-width micro-batch is bisected by the degradation ladder: the
+    well-formed request is served alone, the poison one fails ALONE with
+    `error` recorded — failed traffic may not undercount, and a bad
+    neighbour may not take the batch down with it."""
     adj = _rand_graph(seed=16)
     params = gnn.init_params("GCN", 12, 8, 5)
     srv = _serving("GCN", params, max_batch=2)
     srv.register_graph("g", adj)
     h_a = RNG.normal(size=(80, 12)).astype(np.float32)
-    h_b = RNG.normal(size=(80, 13)).astype(np.float32)
-    with pytest.raises(ValueError, match="mixes feature widths"):
+    h_b = RNG.normal(size=(80, 13)).astype(np.float32)   # wrong fan-in
+    with pytest.raises(ValueError):
         srv.serve([("g", h_a), ("g", h_b)])
     assert len(srv.stats.requests) == 2
-    assert srv.stats.batches == 1
-    assert srv.stats.errors == 2
-    assert all("mixes feature widths" in r.error for r in srv.stats.requests)
-    assert all(r.batch_size == 2 for r in srv.stats.requests)
-    assert srv.stats.mean_batch_size == 2.0
-    assert srv.stats.as_dict()["errors"] == 2
+    assert srv.stats.bisections >= 1
+    assert srv.stats.errors == 1
+    assert srv.stats.quarantined == 1
+    bad = [r for r in srv.stats.requests if r.error is not None]
+    assert len(bad) == 1 and bad[0].batch_size == 1
+    good = [r for r in srv.stats.requests if r.error is None]
+    assert len(good) == 1 and good[0].report is not None
+    assert srv.stats.as_dict()["errors"] == 1
+    # the well-formed request's logits were actually delivered
+    outs = srv.serve([("g", h_a), ("g", h_b)], return_exceptions=True)
+    assert not isinstance(outs[0], Exception)
+    assert isinstance(outs[1], Exception)
+    ref = gnn.run_reference("GCN", adj, jnp.asarray(h_a), params)
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
 
 
 def test_error_escaping_dispatch_fails_batch_instead_of_hanging():
-    """An exception raised before _dispatch's engine try-block (here: same
-    widths but mismatched row counts, so the stacking concatenate throws)
-    must fail the batch's futures — not strand them and deadlock serve()."""
+    """An exception raised before the engine try-block (here: same widths
+    but mismatched row counts, so the stacking concatenate throws) must
+    never strand futures: the ladder bisects, serves the well-formed
+    request, and quarantines the poison one with its error recorded."""
     adj = _rand_graph(seed=22)
     params = gnn.init_params("GCN", 12, 8, 5)
     srv = _serving("GCN", params, max_batch=2)
     srv.register_graph("g", adj)
     h_a = RNG.normal(size=(80, 12)).astype(np.float32)
-    h_b = RNG.normal(size=(96, 12)).astype(np.float32)
+    h_b = RNG.normal(size=(96, 12)).astype(np.float32)  # wrong row count
     with pytest.raises(Exception):
         srv.serve([("g", h_a), ("g", h_b)])
     assert len(srv.stats.requests) == 2
-    assert srv.stats.errors == 2
-    assert srv.stats.batch_reports == []      # failed batch: no report
+    assert srv.stats.errors == 1              # poison fails alone
+    assert srv.stats.quarantined == 1
+    assert len(srv.stats.batch_reports) == 1  # the good half's report
 
 
 def test_serve_after_close_raises_instead_of_hanging():

@@ -259,12 +259,20 @@ def test_load_skips_entries_of_superseded_registration(tmp_path):
 
 
 def test_load_rejects_unknown_version(tmp_path):
+    """A wrong-version snapshot must produce a cold start — counted and
+    carrying the explicit version message — never an unhandled raise (a
+    stale snapshot format may not take serving down)."""
     import pickle
     path = os.fspath(tmp_path / "bad.pkl")
     with open(path, "wb") as f:
         pickle.dump({"version": 999, "entries": [], "graphs": {}}, f)
-    with pytest.raises(ValueError, match="snapshot version"):
-        SharedPlanCache().load(path)
+    cache = SharedPlanCache()
+    manifest = cache.load(path)
+    assert manifest["cold_start"] is True
+    assert manifest["entries"] == 0
+    assert "snapshot version" in manifest["error"]
+    assert cache.stats.snapshot_errors == 1
+    assert len(cache) == 0
 
 
 def test_load_skips_sharded_dispatch_from_bigger_mesh(tmp_path):
