@@ -339,6 +339,47 @@ def run_chaos(requests: int = 32, max_batch: int = 8, model: str = "GCN",
         "all_sites_live": all(r["live"] for r in site_results.values()),
     }
 
+    # ---- sharded chaos: mesh-enabled serving under shard_lower /
+    # shard_exec faults.  The chaos lane sees one device, but a 1-device
+    # mesh drives the full sharded path (band placement → halo lowering →
+    # shard_map execute), so the probes genuinely fire here — unlike in
+    # the meshless liveness loop above, where they are inert.
+    from repro.launch.mesh import make_data_mesh
+    shard_results = {}
+    for site in ("shard_lower", "shard_exec"):
+        fi = FaultInjector(seed=seed).arm(site, rate=1.0, count=2)
+        eng = DynasparseEngine(tile_m=32, tile_n=8, literal=True,
+                               cache=SharedPlanCache(),
+                               mesh=make_data_mesh(1))
+        srv = ServingEngine(model, params, engine=eng,
+                            config=ServingConfig(
+                                max_batch=max_batch,
+                                sketch=SketchConfig(threshold=None),
+                                activation_skip=False, max_retries=2,
+                                faults=fi))
+        srv.register_graph("bench", adj)
+        outs = srv.serve((("bench", h) for h in batches[:live_n]),
+                         return_exceptions=True)
+        correct = all(
+            isinstance(z, Exception)
+            or float(np.max(np.abs(np.asarray(z) - refs_live[i]))) < 1e-3
+            for i, z in enumerate(outs))
+        shard_results[site] = {
+            "resolved": len(outs),
+            "errors": sum(isinstance(z, Exception) for z in outs),
+            "recorded": len(srv.stats.requests),
+            "fired": fi.total_fired, "correct": correct,
+            "live": len(outs) == live_n
+                    and len(srv.stats.requests) == live_n and correct,
+        }
+        srv.close()
+    out["sharded_chaos"] = {
+        "requests_per_site": live_n,
+        "sites": shard_results,
+        "all_fired": all(r["fired"] > 0 for r in shard_results.values()),
+        "all_live": all(r["live"] for r in shard_results.values()),
+    }
+
     # ---- degradation: compiled-program fault → eager fallback, no errors
     fi = FaultInjector(seed=seed).arm("compiled", rate=1.0, count=1, after=1)
     srv = _chaos_serving(adj, params, model, max_batch=max_batch, faults=fi)
@@ -405,6 +446,8 @@ def run_chaos(requests: int = 32, max_batch: int = 8, model: str = "GCN",
         and out["isolation"]["quarantined"] == len(poisons)
         and out["isolation"]["p50_within_budget"]
         and out["liveness"]["all_sites_live"]
+        and out["sharded_chaos"]["all_fired"]
+        and out["sharded_chaos"]["all_live"]
         and out["degraded"]["degraded_batches"] >= 1
         and out["degraded"]["errors"] == 0
         and out["degraded"]["matches_reference"]

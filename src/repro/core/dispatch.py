@@ -60,6 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import halo as _halo
 from repro.kernels import ops
 from repro.kernels.formats import BlockCSR, block_nonzero_mask
 
@@ -166,6 +167,12 @@ def plan_digest(plan, block: int) -> str:
         # plans hash exactly as before so existing digests stay stable.
         h.update(repr(("mesh", placement.n_devices,
                        placement.band_starts)).encode())
+        # Ownership geometry of the owned+halo operand layout: derived
+        # deterministically from (part, placement, block), hashed so the
+        # digest names the support geometry a halo dispatch is lowered for.
+        h.update(repr(("own", _halo.ownership_starts(
+            part.M, part.K, part.tile_m, placement.band_starts, block))
+        ).encode())
     digest = h.hexdigest()
     try:
         plan._dispatch_digest = (block, digest)
@@ -350,19 +357,32 @@ def _masked_y_blocks(geom, y_f):
     return y_blocks
 
 
-def _gemm_scatter(geom, arrays, x, y, z, *, interpret: bool):
-    """Dense-queue section shared by both dispatch kinds: gather the tasks'
-    row/col stripes and scatter one batched GEMM into the canvas."""
-    SM, SN = geom.SM, geom.SN
-    rows, cols = arrays["gemm_rows"], arrays["gemm_cols"]
-    x_p = jnp.pad(x, ((0, geom.m_pad - geom.M), (0, 0)))
+def _gemm_y_panel(geom, y):
+    """Col-stripe-padded GEMM operand panel ``(K, nct, SN)`` from the raw
+    dense operand — the layout ``gemm_batch_scatter`` gathers col stripes
+    from."""
     y_p = jnp.pad(y, ((0, 0), (0, geom.nct * geom.tn - geom.N))
                   ).reshape(geom.K, geom.nct, geom.tn)
-    if SN != geom.tn:
-        y_p = jnp.pad(y_p, ((0, 0), (0, 0), (0, SN - geom.tn)))
-    xs = x_p.reshape(geom.nrt, SM, geom.K)[rows]
+    if geom.SN != geom.tn:
+        y_p = jnp.pad(y_p, ((0, 0), (0, 0), (0, geom.SN - geom.tn)))
+    return y_p
+
+
+def _gemm_scatter_panel(geom, arrays, x, y_p, z, *, interpret: bool):
+    """Dense-queue section on a PRE-BUILT operand panel: gather the tasks'
+    row/col stripes and scatter one batched GEMM into the canvas."""
+    rows, cols = arrays["gemm_rows"], arrays["gemm_cols"]
+    x_p = jnp.pad(x, ((0, geom.m_pad - geom.M), (0, 0)))
+    xs = x_p.reshape(geom.nrt, geom.SM, geom.K)[rows]
     ys = jnp.moveaxis(y_p, 1, 0)[cols]
     return ops.gemm_batch_scatter(xs, ys, rows, cols, z, interpret=interpret)
+
+
+def _gemm_scatter(geom, arrays, x, y, z, *, interpret: bool):
+    """Dense-queue section shared by both dispatch kinds (raw-operand
+    entry point, kept for the activation path)."""
+    return _gemm_scatter_panel(geom, arrays, x, _gemm_y_panel(geom, y), z,
+                               interpret=interpret)
 
 
 def apply_dispatch(geom: DispatchGeometry, arrays, x, y, *, interpret: bool):
@@ -371,18 +391,29 @@ def apply_dispatch(geom: DispatchGeometry, arrays, x, y, *, interpret: bool):
     densified operand) may be ``None`` when the plan has no dense-queue
     tasks.  Inlines into larger jitted programs (`models.gnn.compile_model`).
     """
+    if geom.has_gemm and x is None:
+        raise ValueError("compiled dispatch: dense-queue tasks need the "
+                         "densified x operand (got x=None)")
+    y_f = (_stripe_padded_y(geom, y)
+           if (geom.has_spdmm or geom.has_spmm) else None)
+    y_p = _gemm_y_panel(geom, y) if geom.has_gemm else None
+    return apply_prepared(geom, arrays, x, y_f, y_p, interpret=interpret)
+
+
+def apply_prepared(geom: DispatchGeometry, arrays, x, y_f, y_p,
+                   *, interpret: bool):
+    """Executor body on PRE-LAID-OUT dense operands: ``y_f`` is the
+    stripe-padded operand matrix (ANY block-row count — the halo-sharded
+    path passes each shard's LOCAL owned+halo buffer, whose slots the
+    descriptors were lowered against), ``y_p`` the GEMM panel (required
+    when ``geom.has_gemm``).  The fused kernels index Y only through the
+    descriptor block-row ids, so the operand's leading extent is free."""
     B, SM, SN = geom.B, geom.SM, geom.SN
     M_pad, N_pad = geom.m_pad, geom.n_pad
     z = jnp.zeros((M_pad, N_pad), dtype=jnp.float32)
 
     if geom.has_gemm:
-        if x is None:
-            raise ValueError("compiled dispatch: dense-queue tasks need the "
-                             "densified x operand (got x=None)")
-        z = _gemm_scatter(geom, arrays, x, y, z, interpret=interpret)
-
-    if geom.has_spdmm or geom.has_spmm:
-        y_f = _stripe_padded_y(geom, y)
+        z = _gemm_scatter_panel(geom, arrays, x, y_p, z, interpret=interpret)
 
     if geom.has_spdmm:
         z = ops.spdmm_fused(

@@ -122,12 +122,15 @@ class DynasparseEngine:
         sketch_rows: int = 256,
         calibration: object = "auto",
         mesh: object = None,
+        operand_sharding: str = "halo",
+        per_device_models: "list[HardwareModel] | None" = None,
         faults: object = None,
     ):
         self.hw = hw
         # optional repro.serving.faults.FaultInjector (duck-typed: anything
         # with .probe(site, detail)) consulted at the instrumented sites —
-        # plan / lower / pack / execute.  None (the default) keeps every
+        # plan / lower / pack / execute and, on mesh engines, the sharded
+        # path's shard_lower / shard_exec.  None (the default) keeps every
         # probe a no-op; the serving layer threads its configured injector
         # through here so chaos scenarios exercise the engine's real paths.
         self.faults = faults
@@ -143,6 +146,31 @@ class DynasparseEngine:
                     f"DynasparseEngine mesh must be 1-D with axis ('data',), "
                     f"got axes {names!r}")
         self.mesh = mesh
+        # dense-operand distribution of the sharded executor: "halo" (the
+        # default) ships each device only its OWNED block-rows plus the
+        # halo its band reads (ppermute exchange inside the program);
+        # "replicate" keeps the PR 8 full-replication layout — the bitwise
+        # correctness oracle the halo path is gated against.
+        if operand_sharding not in _shard_exec.OPERAND_SHARDINGS:
+            raise ValueError(
+                f"operand_sharding must be one of "
+                f"{_shard_exec.OPERAND_SHARDINGS}, got {operand_sharding!r}")
+        self.operand_sharding = operand_sharding
+        # heterogeneous per-device cost models for band placement: the
+        # band_partition DP already takes per-(device, stripe) costs, this
+        # hook feeds it genuinely different models (e.g. two calibrated
+        # device generations) instead of n_devices copies of ``hw``.
+        if per_device_models is not None:
+            if mesh is None:
+                raise ValueError(
+                    "per_device_models requires a mesh engine")
+            n_mesh = int(np.prod(mesh.devices.shape))
+            if len(per_device_models) != n_mesh:
+                raise ValueError(
+                    f"per_device_models must list one model per mesh device "
+                    f"({n_mesh}), got {len(per_device_models)}")
+            per_device_models = list(per_device_models)
+        self.per_device_models = per_device_models
         # "auto": hw models marked ``fallback=True`` are replaced for
         # ANALYSIS by a measured CalibratedModel on first plan (lazy — the
         # sweep runs once per process and persists through self.cache);
@@ -242,8 +270,12 @@ class DynasparseEngine:
             if self.mesh is not None:
                 # mesh geometry is part of a placed plan's identity; classic
                 # engines keep the historical key shape so their cached plans
-                # are untouched by the sharding layer
-                plan_key = plan_key + (("mesh", self.n_devices),)
+                # are untouched by the sharding layer.  Heterogeneous device
+                # models shift the band DP, so their names join the key.
+                mesh_key = ("mesh", self.n_devices)
+                if self.per_device_models is not None:
+                    mesh_key += tuple(m.name for m in self.per_device_models)
+                plan_key = plan_key + (mesh_key,)
             cached = self.cache.get_plan(plan_key)
             if cached is not None:
                 if self.drift_threshold is None:
@@ -282,7 +314,9 @@ class DynasparseEngine:
         # engines additionally place contiguous stripe bands onto devices
         placement = None
         if self.mesh is not None:
-            hws = [hw] * self.n_devices
+            hws = (list(self.per_device_models)
+                   if self.per_device_models is not None
+                   else [hw] * self.n_devices)
             stq, dtq, placement = _analyzer.analyze_sharded(
                 part, hws, strategy=self.strategy, mode=self.mode)
             rep = _scheduler.simulate_sharded(stq, dtq, placement, hws)
@@ -390,10 +424,11 @@ class DynasparseEngine:
         _, entry = self._packed_structure(plan, x)
         digest = _dispatch.plan_digest(plan, self.block)
         return self.cache.sharded_dispatch(
-            (plan.struct_key, digest, self.n_devices),
+            (plan.struct_key, digest, self.n_devices, self.operand_sharding),
             lambda: _shard_exec.build_sharded_dispatch(
                 plan.part, plan.stq, plan.dtq, entry.stripes, plan.placement,
                 block=self.block, eps=self.eps, fingerprint=digest,
+                operand_sharding=self.operand_sharding,
                 faults=self.faults))
 
     def activation_dispatch_for(
@@ -488,7 +523,7 @@ class DynasparseEngine:
                     sd, xd = spair
                     return _shard_exec.execute_sharded(
                         sd, xd, y, mesh=self.mesh, interpret=interpret,
-                        stats=self.cache.stats)
+                        stats=self.cache.stats, faults=self.faults)
             pair = self.compiled_operands(plan, x)
             if pair is not None:
                 d, xd = pair

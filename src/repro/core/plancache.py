@@ -368,10 +368,12 @@ class PlanCache:
     def sharded_dispatch(self, key: tuple, compute: Callable[[], object]):
         """Get-or-compute a :class:`~repro.core.shard_exec.ShardedDispatch`.
 
-        Keyed on (structure key, plan digest, device count) — the digest of
-        a placed plan already hashes the band layout, and the explicit
-        device count keeps sharded entries key-separated from unsharded
-        ones, so single- and multi-device plans of one graph coexist.
+        Keyed on (structure key, plan digest, device count, operand-sharding
+        mode) — the digest of a placed plan already hashes the band layout
+        and ownership geometry, the explicit device count keeps sharded
+        entries key-separated from unsharded ones (so single- and
+        multi-device plans of one graph coexist), and the mode keeps halo
+        and replicated lowerings of one plan from shadowing each other.
         Counts into the shared dispatch_* counters: the bench invariants
         (``dispatch_builds == plans`` in steady state) hold per engine
         whether it shards or not."""
@@ -388,6 +390,28 @@ class PlanCache:
     def sharded_count(self) -> int:
         """Number of cached sharded-dispatch entries."""
         return sum(1 for (kind, _k) in self._entries if kind == self._SHARD)
+
+    def sharded_operand_bytes(self) -> dict:
+        """Aggregate analytic dense-operand memory accounting over every
+        cached sharded dispatch: owned / halo / replicated-fallback bytes
+        (``ShardedDispatch.operand_bytes``) summed across entries, plus the
+        replicated baseline those entries would have cost.  Surfaced by
+        ``ServingEngine.dispatch_stats()``."""
+        out = {"entries": 0, "owned_bytes": 0, "halo_bytes": 0,
+               "fallback_bytes": 0, "replicated_bytes": 0}
+        for (kind, _k), (value, _nb) in list(self._entries.items()):
+            if kind != self._SHARD:
+                continue
+            ob = getattr(value, "operand_bytes", None)
+            if not ob:
+                continue
+            out["entries"] += 1
+            for f in ("owned_bytes", "halo_bytes", "fallback_bytes"):
+                out[f] += int(ob.get(f, 0))
+            out["replicated_bytes"] += (
+                int(ob.get("replicated_per_device_bytes", 0))
+                * int(getattr(value, "n_devices", 1)))
+        return out
 
     def activation_dispatch(self, key: tuple, compute: Callable[[], object]):
         """Get-or-compute an

@@ -5,7 +5,7 @@ A device-placed plan (``KernelPlan.placement`` from
 :class:`ShardedDispatch`: the same descriptor arrays a
 :class:`~repro.core.dispatch.CompiledDispatch` carries, but banded by device
 (leading device axis, contiguous LOCAL row numbering inside each band) and
-executed by ONE ``shard_map``-wrapped :func:`~repro.core.dispatch.apply_dispatch`
+executed by ONE ``shard_map``-wrapped :func:`~repro.core.dispatch.apply_prepared`
 body on a 1-D ``("data",)`` mesh.  Mesh size 1 is the degenerate case of the
 same code path — there is no single-device fork — and the result is
 bit-identical to the unsharded executor (see below).
@@ -29,13 +29,32 @@ padding needed to equalize per-device entry counts:
   no-op — the same sentinel-zero-block idiom ``kernels/spmm.py`` uses for its
   own padding triples).
 
+Owned-operand sharding with halo exchange (``operand_sharding="halo"``)
+-----------------------------------------------------------------------
+By default the dense operand Y no longer enters the program replicated.
+Lowering runs a per-band COLUMN-SUPPORT analysis over the descriptors it
+just built (SpDMM entries name their Y block-rows directly; SpMM triples
+encode them in ``y_ids``; GEMM bands read everything → replicated
+fallback), emits one :class:`repro.core.halo.ColumnSupport` per device, and
+compiles a static ring-exchange schedule (:func:`repro.core.halo.
+build_exchange`).  Y is split by block-row OWNERSHIP outside the program
+(each shard's ``in_spec P("data")`` slab holds only its owned rows), the
+``shard_map`` body first runs ``nd - 1`` ``ppermute`` rounds copying halo
+blocks into a local ``(L + 1)`` slot owned+halo buffer, and the SpDMM/SpMM
+descriptors — rewritten at lowering time from global block-rows to local
+buffer slots — feed the very same fused kernels.  Per-device dense-operand
+memory drops from ``O(ncb)`` block-rows to ``O(max_own + max_support)``;
+a fully block-diagonal graph has empty halos and emits ZERO collectives.
+``operand_sharding="replicate"`` keeps the PR 8 layout as the bitwise
+correctness oracle.
+
 Bit-identity with the unsharded executor holds because every REAL output
 block receives exactly the contribution sequence it receives globally: the
 per-band entry sort (local ``out_row`` = global ``out_row`` − band offset)
-preserves the global per-block ordering, Y is replicated (cross-band edges
-are satisfied by full X col-stripe replication — an all-gather in spirit;
-true halo exchange is a ROADMAP follow-up), and float accumulation order per
-block is unchanged.
+preserves the global per-block ordering, the halo exchange is pure data
+movement of the rows ``_stripe_padded_y`` lays out globally (descriptor
+entry ORDER never changes, only Y indices are remapped to local slots), and
+float accumulation order per block is unchanged.
 """
 from __future__ import annotations
 
@@ -49,6 +68,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import dispatch as _dispatch
+from repro.core import halo as _halo
+
+OPERAND_SHARDINGS = ("halo", "replicate")
 
 
 @dataclasses.dataclass
@@ -58,9 +80,15 @@ class ShardedDispatch:
     ``geom`` is the per-shard LOCAL geometry (uniform across devices:
     ``nrt = max_band_tiles + 1`` with the ghost tile, ``M = m_pad``).
     ``arrays`` mirrors :class:`~repro.core.dispatch.CompiledDispatch.arrays`
-    with a leading device axis.  ``band_rows[d]`` is the count of logical
-    output rows device ``d`` owns (the final assembly concatenates
-    ``z[d, :band_rows[d]]``).
+    with a leading device axis — in halo mode that includes the exchange
+    schedule index arrays (``hx_*``), so snapshot restore re-uploads them
+    with everything else.  ``band_rows[d]`` is the count of logical output
+    rows device ``d`` owns (the final assembly concatenates
+    ``z[d, :band_rows[d]]``).  ``halo`` is the static
+    :class:`~repro.core.halo.HaloGeometry` (``None`` → replicated operand),
+    ``supports`` the per-device column supports, and ``operand_bytes`` the
+    analytic per-device dense-operand memory accounting
+    (``dispatch_stats()`` aggregates it).
     """
     geom: _dispatch.DispatchGeometry
     n_devices: int
@@ -69,6 +97,10 @@ class ShardedDispatch:
     M: int                             # global logical row count
     arrays: dict[str, jax.Array]
     fingerprint: str
+    supports: tuple = ()
+    halo: object = None                # _halo.HaloGeometry | None
+    operand_sharding: str = "replicate"
+    operand_bytes: dict = dataclasses.field(default_factory=dict)
 
     @property
     def needs_x(self) -> bool:
@@ -86,20 +118,69 @@ def _band_tasks(tasks, placement, d):
     return [dataclasses.replace(t, i=t.i - lo) for t in tasks if lo <= t.i < hi]
 
 
+def _column_supports(per_gemm, per_spdmm, per_spmm, own_starts, ncb, nyc):
+    """Per-device :class:`~repro.core.halo.ColumnSupport` from the lowered
+    descriptor arrays: SpDMM entries carry Y block-rows in ``y_rows``, SpMM
+    triples carry ``block_row * nyc + block_col`` in ``y_ids``, and a band
+    with real GEMM tasks reads the whole operand (replicated fallback)."""
+    nd = len(own_starts) - 1
+    supports = []
+    for d in range(nd):
+        full = len(per_gemm[d]) > 0
+        if full:
+            read = set(range(ncb))
+        else:
+            read = set()
+            e = per_spdmm[d][1]
+            if e is not None:
+                read.update(int(g) for g in np.unique(e[1]))
+            e = per_spmm[d][1]
+            if e is not None:
+                read.update(int(g) for g in np.unique(e[1] // nyc))
+        own = range(own_starts[d], own_starts[d + 1])
+        supports.append(_halo.ColumnSupport(
+            own_start=own_starts[d], own_stop=own_starts[d + 1],
+            halo=tuple(sorted(read - set(own))), full=full))
+    return tuple(supports)
+
+
+def _localize_entries(supports, per_spdmm, per_spmm, ncb, nyc):
+    """Rewrite Y indices from GLOBAL block-rows to LOCAL owned+halo buffer
+    slots, per device.  Entry order (hence accumulation order) untouched."""
+    sp_out, mm_out = [], []
+    for cs, (sp_pool, sp_e), (mm_pool, mm_e) in zip(
+            supports, per_spdmm, per_spmm):
+        lut = np.zeros(ncb, np.int64)
+        for slot, g in enumerate(cs.local_blocks()):
+            lut[g] = slot
+        if sp_e is not None:
+            sp_e = (sp_e[0], lut[sp_e[1]], sp_e[2], sp_e[3], sp_e[4])
+        if mm_e is not None:
+            mm_e = (mm_e[0], lut[mm_e[1] // nyc] * nyc + mm_e[1] % nyc,
+                    mm_e[2], mm_e[3], mm_e[4])
+        sp_out.append((sp_pool, sp_e))
+        mm_out.append((mm_pool, mm_e))
+    return sp_out, mm_out
+
+
 def build_sharded_dispatch(part, stq, dtq, stripes, placement,
                            *, block: int, eps: float = 0.0,
                            fingerprint: str = "",
+                           operand_sharding: str = "halo",
                            faults: object = None) -> ShardedDispatch | None:
     """Lower a device-placed plan into a :class:`ShardedDispatch`.
 
     Same O(nnz blocks) vectorized-numpy cost as
     :func:`~repro.core.dispatch.build_dispatch`, paid once per (structure,
-    assignment, mesh geometry); ``None`` when the canvas geometry cannot
-    take the in-place index maps (caller falls back to the eager path,
-    which is placement-agnostic and already correct).
+    assignment, mesh geometry, operand-sharding mode); ``None`` when the
+    canvas geometry cannot take the in-place index maps (caller falls back
+    to the eager path, which is placement-agnostic and already correct).
     """
+    if operand_sharding not in OPERAND_SHARDINGS:
+        raise ValueError(f"operand_sharding must be one of "
+                         f"{OPERAND_SHARDINGS}, got {operand_sharding!r}")
     if faults is not None:
-        faults.probe("lower", detail=f"shard:{part.name}")
+        faults.probe("shard_lower", detail=f"shard:{part.name}")
     slots = _dispatch.canvas_slots(part, block)
     if slots is None:
         return None
@@ -148,6 +229,26 @@ def build_sharded_dispatch(part, stq, dtq, stripes, placement,
                              None))
 
     n_gemm = max((len(g) for g in per_gemm), default=0)
+
+    ncb = -(-part.K // B)
+    nyc = part.n_col_tiles * C                 # Y pool blocks per block-row
+    supports: tuple = ()
+    hg = None
+    hx_arrays: dict[str, np.ndarray] = {}
+    if operand_sharding == "halo":
+        own_starts = _halo.ownership_starts(part.M, part.K, part.tile_m,
+                                            bs, B)
+        supports = _column_supports(per_gemm, per_spdmm, per_spmm,
+                                    own_starts, ncb, nyc)
+        per_spdmm, per_spmm = _localize_entries(supports, per_spdmm,
+                                                per_spmm, ncb, nyc)
+        hg, own_dst, hx_src, hx_dst, gather = _halo.build_exchange(
+            supports, own_starts, gather=n_gemm > 0)
+        hx_arrays = {"hx_own_dst": own_dst, "hx_src": hx_src,
+                     "hx_dst": hx_dst}
+        if gather is not None:
+            hx_arrays["hx_gather"] = gather
+
     n_sp = max((0 if e is None else len(e[0]) for _, e in per_spdmm),
                default=0)
     n_mm = max((0 if e is None else len(e[0]) for _, e in per_spmm),
@@ -159,7 +260,8 @@ def build_sharded_dispatch(part, stq, dtq, stripes, placement,
         has_gemm=n_gemm > 0, has_spdmm=n_sp > 0, has_spmm=n_mm > 0,
         eps=eps)
 
-    arrays: dict[str, jax.Array] = {}
+    arrays: dict[str, jax.Array] = {
+        k: jnp.asarray(v) for k, v in hx_arrays.items()}
 
     if n_gemm:
         rows = np.full((nd, n_gemm), nrt_l - 1, dtype=np.int32)
@@ -197,6 +299,8 @@ def build_sharded_dispatch(part, stq, dtq, stripes, placement,
             per_spdmm, n_sp,
             ("a_ids", "y_rows", "out_rows", "out_cols", "first"),
             # pads: zero-sentinel A block × Y row 0 → ghost block, first=0
+            # (in halo mode Y row 0 is local slot 0 — any resident block
+            # works: a zero A block accumulates an exact bitwise no-op)
             (lambda pl: pl - 1, lambda pl: 0, lambda pl: ghost_row,
              lambda pl: 0, lambda pl: 0))
         arrays["sp_pool"] = sec["pool"]
@@ -213,60 +317,118 @@ def build_sharded_dispatch(part, stq, dtq, stripes, placement,
         for name in ("a_ids", "y_ids", "out_rows", "out_cols", "first"):
             arrays[f"mm_{name}"] = sec[name]
 
+    width = part.n_col_tiles * SN
+    if operand_sharding == "halo":
+        op_bytes = _halo.operand_bytes(supports, hg, B, width)
+    else:
+        bb = B * width * 4
+        op_bytes = {"mode": "replicate", "per_device": [
+            {"owned_bytes": 0, "halo_bytes": 0, "fallback_bytes": ncb * bb,
+             "full": True} for _ in range(nd)],
+            "owned_bytes": 0, "halo_bytes": 0,
+            "fallback_bytes": nd * ncb * bb,
+            "halo_per_device_bytes": ncb * bb,
+            "replicated_per_device_bytes": ncb * bb}
+
     return ShardedDispatch(geom=geom, n_devices=nd, band_starts=tuple(bs),
                            band_rows=band_rows, M=part.M, arrays=arrays,
-                           fingerprint=fingerprint)
+                           fingerprint=fingerprint, supports=supports,
+                           halo=hg, operand_sharding=operand_sharding,
+                           operand_bytes=op_bytes)
 
 
-def apply_sharded(geom, band_rows, arrays, x, y, *, mesh, interpret: bool):
-    """Traceable sharded executor body: slab X per band → ``shard_map`` the
-    SHARED :func:`~repro.core.dispatch.apply_dispatch` body → concatenate
-    each band's logical rows.  Inlines into larger jitted programs
+def _x_slabs(geom, band_rows, x):
+    """Per-band X slabs padded to the uniform shard height."""
+    slabs, row0 = [], 0
+    for r in band_rows:
+        sl = jax.lax.slice_in_dim(x, row0, row0 + r, axis=0)
+        slabs.append(jnp.pad(sl, ((0, geom.m_pad - r), (0, 0))))
+        row0 += r
+    return jnp.stack(slabs)
+
+
+def _y_owned_slabs(geom, halo, y):
+    """Owned block-row slabs of the stripe-padded operand, padded to
+    ``max_own`` so every shard's ``in_spec P("data")`` slice is uniform."""
+    B = geom.B
+    W = geom.nct * geom.SN
+    yb = _dispatch._stripe_padded_y(geom, y).reshape(geom.ncb, B, W)
+    slabs = []
+    for d in range(halo.n_devices):
+        sl = yb[halo.own_starts[d]:halo.own_starts[d + 1]]
+        slabs.append(jnp.pad(sl, ((0, halo.max_own - sl.shape[0]),
+                                  (0, 0), (0, 0))))
+    return jnp.stack(slabs)
+
+
+def apply_sharded(geom, band_rows, arrays, x, y, *, mesh, interpret: bool,
+                  halo=None):
+    """Traceable sharded executor body: slab X per band (and, in halo mode,
+    slab Y per OWNER) → ``shard_map`` the shared
+    :func:`~repro.core.dispatch.apply_prepared` body → concatenate each
+    band's logical rows.  Inlines into larger jitted programs
     (``models.gnn.compile_model``), exactly like the unsharded body."""
     nd = len(band_rows)
     y = jnp.asarray(y)
 
+    if geom.has_gemm and x is None:
+        raise ValueError("sharded dispatch: dense-queue tasks need the "
+                         "densified x operand (got x=None)")
+
+    if halo is None:
+        # Replicated-operand oracle: Y enters every shard whole.
+        def shard_body(local, x_l, y_rep):
+            return _dispatch.apply_dispatch(geom, local, x_l, y_rep,
+                                            interpret=interpret)
+        y_in, y_spec = y, P()
+    else:
+        B, W = geom.B, geom.nct * geom.SN
+
+        def shard_body(local, x_l, y_own):
+            ybuf = _halo.exchange(local, y_own, halo)
+            y_fl = ybuf.reshape((halo.L + 1) * B, W)
+            y_pl = None
+            if geom.has_gemm:
+                y_pl = ybuf[local["hx_gather"]].reshape(
+                    geom.ncb * B, geom.nct, geom.SN)[:geom.K]
+            return _dispatch.apply_prepared(geom, local, x_l, y_fl, y_pl,
+                                            interpret=interpret)
+        y_in, y_spec = _y_owned_slabs(geom, halo, y), P("data")
+
     if geom.has_gemm:
-        if x is None:
-            raise ValueError("sharded dispatch: dense-queue tasks need the "
-                             "densified x operand (got x=None)")
-        x = jnp.asarray(x)
-        slabs, row0 = [], 0
-        for r in band_rows:
-            sl = jax.lax.slice_in_dim(x, row0, row0 + r, axis=0)
-            slabs.append(jnp.pad(sl, ((0, geom.m_pad - r), (0, 0))))
-            row0 += r
-        x_sh = jnp.stack(slabs)
+        x_sh = _x_slabs(geom, band_rows, jnp.asarray(x))
 
         def body(arrs, xs, yy):
             local = {k: v[0] for k, v in arrs.items()}
-            return _dispatch.apply_dispatch(
-                geom, local, xs[0], yy, interpret=interpret)[None]
+            return shard_body(local, xs[0],
+                              yy if halo is None else yy[0])[None]
 
         f = compat.shard_map(body, mesh=mesh,
-                             in_specs=(P("data"), P("data"), P()),
+                             in_specs=(P("data"), P("data"), y_spec),
                              out_specs=P("data"))
-        zs = f(arrays, x_sh, y)
+        zs = f(arrays, x_sh, y_in)
     else:
         def body(arrs, yy):
             local = {k: v[0] for k, v in arrs.items()}
-            return _dispatch.apply_dispatch(
-                geom, local, None, yy, interpret=interpret)[None]
+            return shard_body(local, None,
+                              yy if halo is None else yy[0])[None]
 
         f = compat.shard_map(body, mesh=mesh,
-                             in_specs=(P("data"), P()),
+                             in_specs=(P("data"), y_spec),
                              out_specs=P("data"))
-        zs = f(arrays, y)
+        zs = f(arrays, y_in)
 
     parts = [zs[d, :band_rows[d]] for d in range(nd) if band_rows[d]]
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("geom", "band_rows", "mesh", "interpret"))
-def _run_sharded(geom, band_rows, arrays, x, y, *, mesh, interpret):
+                   static_argnames=("geom", "band_rows", "mesh", "interpret",
+                                    "halo"))
+def _run_sharded(geom, band_rows, arrays, x, y, *, mesh, interpret,
+                 halo=None):
     return apply_sharded(geom, band_rows, arrays, x, y,
-                         mesh=mesh, interpret=interpret)
+                         mesh=mesh, interpret=interpret, halo=halo)
 
 
 def _shard_signature(sd, x, y, mesh, interpret):
@@ -274,14 +436,17 @@ def _shard_signature(sd, x, y, mesh, interpret):
                            for k, v in sd.arrays.items()))
     x_sig = None if x is None else (tuple(x.shape), str(x.dtype))
     return ("shard", sd.geom, sd.band_rows, int(np.prod(mesh.devices.shape)),
-            arr_sig, x_sig, tuple(y.shape), str(y.dtype), interpret)
+            sd.halo, arr_sig, x_sig, tuple(y.shape), str(y.dtype), interpret)
 
 
 def execute_sharded(sd: ShardedDispatch, x, y, *, mesh, interpret: bool,
-                    stats=None) -> jax.Array:
+                    stats=None, faults=None) -> jax.Array:
     """Run one sharded compiled kernel: a single jitted call, zero host
     descriptor work.  Shares the trace registry with the unsharded executor
     so ``CacheStats`` trace accounting stays one ledger."""
+    if faults is not None:
+        faults.probe("shard_exec",
+                     detail=f"nd:{sd.n_devices}:{sd.operand_sharding}")
     y = jnp.asarray(y)
     key = _shard_signature(sd, x, y, mesh, interpret)
     with _dispatch._TRACE_LOCK:
@@ -293,4 +458,4 @@ def execute_sharded(sd: ShardedDispatch, x, y, *, mesh, interpret: bool,
         else:
             stats.trace_builds += 1
     return _run_sharded(sd.geom, sd.band_rows, sd.arrays, x, y,
-                        mesh=mesh, interpret=interpret)
+                        mesh=mesh, interpret=interpret, halo=sd.halo)

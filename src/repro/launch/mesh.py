@@ -11,6 +11,8 @@ runs on jax 0.4.37 (no ``AxisType``) and on current jax.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 from repro import compat
@@ -34,9 +36,25 @@ def make_data_mesh(n_devices: int) -> jax.sharding.Mesh:
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return compat.make_mesh(shape, axes)
+    """Deprecated shim over :func:`make_mesh_for_devices` — the ONE
+    validated mesh factory.  The fixed 16×16 (/ 2×16×16) shapes stay for
+    callers that still use them, but the device count is now checked up
+    front: previously ``multi_pod=True`` on a single host built a 512-chip
+    mesh shape that only blew up (or silently mis-sharded) at first use."""
+    warnings.warn(
+        "make_production_mesh is deprecated; use "
+        "make_mesh_for_devices(n_devices, model_parallel=..., pods=...)",
+        DeprecationWarning, stacklevel=2)
+    n = 512 if multi_pod else 256
+    avail = len(jax.devices())
+    if n > avail:
+        raise ValueError(
+            f"make_production_mesh(multi_pod={multi_pod}) needs {n} devices "
+            f"but only {avail} device(s) are visible"
+            + (" — a multi-pod mesh cannot be built on a single host"
+               if multi_pod else ""))
+    return make_mesh_for_devices(n, model_parallel=16,
+                                 pods=2 if multi_pod else 1)
 
 
 def make_mesh_for_devices(n_devices: int, *, model_parallel: int = 1,

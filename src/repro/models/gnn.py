@@ -247,7 +247,7 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
     """
     transport = transport if transport is not None else (lambda mm: mm)
     h = jnp.asarray(h)
-    # ("sparse", geom) | ("shard", (geom, band_rows)) | ("act", geom)
+    # ("sparse", geom) | ("shard", (geom, band_rows, halo)) | ("act", geom)
     # | ("gemm", None) per kernel
     records: list[tuple[str, object]] = []
     payload: list = []
@@ -265,7 +265,8 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
                     payload.append(None)
                 else:
                     sd, xd = spair
-                    records.append(("shard", (sd.geom, sd.band_rows)))
+                    records.append(("shard",
+                                    (sd.geom, sd.band_rows, sd.halo)))
                     payload.append({"arrays": dict(sd.arrays), "xd": xd})
                 return z
             pair = engine.compiled_operands(engine.last_plan, x)
@@ -314,10 +315,10 @@ def compile_model(model: str, engine: DynasparseEngine, adj, h, params,
                 act_diags.append(diag)
                 return z
             if kind == "shard":
-                sgeom, band_rows = geom
+                sgeom, band_rows, halo = geom
                 return _shard_exec.apply_sharded(
                     sgeom, band_rows, p["arrays"], p["xd"], y,
-                    mesh=engine.mesh, interpret=interpret)
+                    mesh=engine.mesh, interpret=interpret, halo=halo)
             return _dispatch.apply_dispatch(geom, p["arrays"], p["xd"], y,
                                             interpret=interpret)
 

@@ -47,7 +47,14 @@ from repro.core.plancache import coo_fingerprint
 # ``device``, ScheduleReport grew ``per_device``, and the sharded-dispatch
 # entry kind was added; v3 snapshots would restore plans whose dataclasses
 # miss those fields.
-_PERSIST_VERSION = 4
+# v5: owned-operand halo sharding — ShardedDispatch grew
+# ``supports``/``halo``/``operand_sharding``/``operand_bytes``, its
+# ``arrays`` carry the ``hx_*`` exchange-schedule index streams, sharded
+# cache keys carry the operand-sharding mode, and placed plan digests hash
+# the ownership geometry; v4 ``_SHARD`` entries (and their keys) would
+# replay the replicated layout under halo-mode keys, so v4 snapshots
+# cold-start exactly as other stale versions do.
+_PERSIST_VERSION = 5
 
 
 @dataclasses.dataclass(frozen=True)

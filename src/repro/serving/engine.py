@@ -125,6 +125,12 @@ class ServingConfig:
     # under shard_map.  Requires the host to expose that many devices
     # (``launch.mesh.make_data_mesh`` raises otherwise).
     n_devices: int | None = None
+    # Dense-operand distribution of the sharded executor: "halo" (default)
+    # ships each device only its owned block-rows + the halo its band reads
+    # (static ppermute exchange inside the program); "replicate" keeps the
+    # full-replication layout — the bitwise correctness oracle.  Ignored
+    # without ``n_devices``.
+    operand_sharding: str = "halo"
     # ---- degraded-mode serving (fault tolerance policy) -----------------
     # Per-request retry budget once a request has been isolated by the
     # bisection ladder (a failed micro-batch is split in halves until the
@@ -341,7 +347,9 @@ class ServingEngine:
                 # eager execution
                 engine = DynasparseEngine(
                     cache=shared, mesh=make_data_mesh(config.n_devices),
-                    literal=True, batched=True, faults=config.faults)
+                    literal=True, batched=True,
+                    operand_sharding=config.operand_sharding,
+                    faults=config.faults)
             else:
                 # `is None`, not `or`: an empty PlanCache is falsy (__len__)
                 engine = DynasparseEngine(cache=shared, faults=config.faults)
@@ -399,6 +407,11 @@ class ServingEngine:
             "plans": self.engine.cache.plan_count(),
             "n_devices": self.engine.n_devices,
             "sharded_dispatches": self.engine.cache.sharded_count(),
+            "operand_sharding": getattr(self.engine, "operand_sharding",
+                                        "replicate"),
+            # per-device dense-operand memory accounting of the sharded
+            # dispatches (owned / halo / replicated-fallback bytes)
+            "operand_bytes": self.engine.cache.sharded_operand_bytes(),
             "dispatch_builds": s.dispatch_builds,
             "dispatch_hits": s.dispatch_hits,
             "act_builds": s.act_builds,
@@ -590,6 +603,7 @@ class ServingEngine:
         # record EVERY request before resolving ANY future: gather() raises
         # on the first exception, so a caller can observe stats the moment
         # one future fails — interleaving would undercount the batch
+        self._monitor.heartbeat("dispatch-0", step_time=t1 - t0)
         for r in batch:
             self._record_request(r, t0=t0, t1=t1, batch_size=len(batch),
                                  error=f"{type(exc).__name__}: {exc}")
@@ -630,17 +644,18 @@ class ServingEngine:
     # ------------------------------------------------- degradation ladder
     def _dispatch(self, graph_id: str, batch: list[_Request]) -> None:
         """Worker-thread entry for one micro-batch: run the degradation
-        ladder, then heartbeat the dispatch-worker monitor with the step
-        time (the ``dispatch_stats()["health"]`` surface)."""
-        t0 = time.perf_counter()
+        ladder.  Per-step times are heartbeated from the resolution sites
+        (``_execute_batch`` / ``_fail_batch``) BEFORE any future resolves —
+        the ``dispatch_stats()["health"]`` surface must show a batch by the
+        time its caller unblocks.  The epilogue heartbeat here is
+        liveness-only (no step time) so steps aren't double-counted."""
         try:
             batch = [r for r in batch
                      if not (r.abandoned or r.future.done())]
             if batch:
                 self._serve_batch(graph_id, batch)
         finally:
-            self._monitor.heartbeat("dispatch-0",
-                                    step_time=time.perf_counter() - t0)
+            self._monitor.heartbeat("dispatch-0")
 
     def _serve_batch(self, graph_id: str, batch: list[_Request],
                      attempt: int = 0) -> None:
@@ -793,6 +808,11 @@ class ServingEngine:
             self.stats.compiled_batches += int(compiled)
             self.stats.degraded_batches += int(degraded)
             self.stats.batch_reports.append(report)
+        # heartbeat BEFORE resolving any future: serve() returns the moment
+        # the last future resolves, and dispatch_stats()["health"] must
+        # already show this batch's step by then (racing the worker's
+        # epilogue against the caller reads as a missed heartbeat)
+        self._monitor.heartbeat("dispatch-0", step_time=t1 - t0)
         share = report.attributed(k)
         for idx, r in enumerate(batch):
             z = logits[:, idx * out_w:(idx + 1) * out_w]

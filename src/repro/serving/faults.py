@@ -13,12 +13,16 @@ Instrumented sites (``KNOWN_SITES``):
 
 ====================  ====================================================
 ``plan``              ``DynasparseEngine.plan`` entry (analysis phase)
-``lower``             descriptor lowering (``build_dispatch`` /
-                      ``build_sharded_dispatch`` compute paths)
+``lower``             single-device descriptor lowering (``build_dispatch``)
 ``pack``              structure/activation packing
                       (``_packed_structure`` build,
                       ``build_activation_dispatch``)
 ``execute``           ``DynasparseEngine.execute`` entry (eager execute)
+``shard_lower``       sharded descriptor lowering + halo-exchange schedule
+                      compilation (``build_sharded_dispatch``)
+``shard_exec``        sharded compiled execute entry
+                      (``shard_exec.execute_sharded`` — the one jitted
+                      ``shard_map`` call of a mesh engine)
 ``compiled``          ``CompiledModel.__call__`` (whole-model compiled
                       execute)
 ``request``           per-request probe inside the serving dispatch — the
@@ -51,6 +55,7 @@ import numpy as np
 
 KNOWN_SITES = frozenset({
     "plan", "lower", "pack", "execute", "compiled",
+    "shard_lower", "shard_exec",
     "request", "dispatch", "snapshot_save", "snapshot_load",
 })
 

@@ -241,3 +241,90 @@ def test_serving_config_n_devices_conflict():
     with pytest.raises(ValueError, match="conflicts"):
         ServingEngine("GCN", params, engine=eng,
                       config=ServingConfig(max_batch=2, n_devices=2))
+
+
+# ------------------------------------------------- operand sharding / halo
+def test_operand_sharding_validated_and_cache_keyed():
+    """Bad mode rejected up front; halo and replicate engines sharing one
+    cache produce bitwise-equal results from two distinct sharded entries
+    (the mode is part of the dispatch cache key)."""
+    with pytest.raises(ValueError, match="operand_sharding"):
+        DynasparseEngine(mesh=make_data_mesh(1), operand_sharding="bogus")
+
+    cache = SharedPlanCache()
+    adj = _rand_graph(seed=10)
+    y = np.random.default_rng(10).standard_normal((96, 8)).astype(np.float32)
+    eh = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache,
+                          mesh=make_data_mesh(1))   # halo is the default
+    er = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache,
+                          mesh=make_data_mesh(1),
+                          operand_sharding="replicate")
+    zh = np.asarray(eh.matmul(adj, y)[0])
+    zr = np.asarray(er.matmul(adj, y)[0])
+    assert (zh == zr).all()
+    assert cache.sharded_count() == 2
+    acct = cache.sharded_operand_bytes()
+    assert acct["entries"] == 2
+    assert acct["owned_bytes"] > 0
+
+
+def test_per_device_models_requires_mesh_and_matching_length():
+    import dataclasses
+
+    slow = dataclasses.replace(VCK5000, name="vck5000-half",
+                               f_dense=VCK5000.f_dense / 2)
+    with pytest.raises(ValueError, match="requires a mesh"):
+        DynasparseEngine(per_device_models=[VCK5000])
+    with pytest.raises(ValueError, match="one model per mesh device"):
+        DynasparseEngine(mesh=make_data_mesh(1),
+                         per_device_models=[VCK5000, slow])
+
+
+def test_per_device_models_distinct_plan_key():
+    """Heterogeneous model names join the plan key: a default and a
+    per-device-model engine sharing one cache coexist as two plans (in a
+    model-invariant mode the math is identical, so results stay
+    bitwise-equal — only the cache keys differ)."""
+    import dataclasses
+
+    cache = SharedPlanCache()
+    adj = _rand_graph(seed=11)
+    y = np.random.default_rng(11).standard_normal((96, 8)).astype(np.float32)
+    slow = dataclasses.replace(VCK5000, name="vck5000-half",
+                               f_dense=VCK5000.f_dense / 2,
+                               f_sparse=VCK5000.f_sparse / 2)
+    e1 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache,
+                          mode="sparse_only", strategy="greedy",
+                          mesh=make_data_mesh(1))
+    e2 = DynasparseEngine(tile_m=16, tile_n=8, literal=True, cache=cache,
+                          mode="sparse_only", strategy="greedy",
+                          mesh=make_data_mesh(1), per_device_models=[slow])
+    z1 = np.asarray(e1.matmul(adj, y)[0])
+    z2 = np.asarray(e2.matmul(adj, y)[0])
+    assert (z1 == z2).all()
+    assert cache.plan_count() == 2
+
+
+def test_make_production_mesh_is_deprecated_shim():
+    """The fixed-shape factory now warns, validates the device count up
+    front (instead of mis-sharding at first use), and names the single-host
+    multi-pod impossibility explicitly."""
+    from repro.launch.mesh import make_production_mesh
+
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="needs 256 devices"):
+            make_production_mesh()
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="single host"):
+            make_production_mesh(multi_pod=True)
+
+
+def test_serving_reports_operand_sharding_stats():
+    from repro.models import gnn
+    params = gnn.init_params("GCN", 12, 8, 5)
+    srv = ServingEngine("GCN", params,
+                        config=ServingConfig(max_batch=2, n_devices=1),
+                        cache=SharedPlanCache())
+    st = srv.dispatch_stats()
+    assert st["operand_sharding"] == "halo"
+    assert "operand_bytes" in st

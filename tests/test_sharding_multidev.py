@@ -166,10 +166,14 @@ _GNN_SHARD_SCRIPT = textwrap.dedent("""
 
     out = {"cases": 0, "exec_mismatch": 0, "mesh1_mismatch": 0,
            "invariant_mismatch": 0, "saw_mixed": 0, "saw_spmm": 0,
-           "saw_nondivisible": 0, "saw_ragged": 0}
+           "saw_nondivisible": 0, "saw_ragged": 0,
+           "halo_mismatch": 0, "saw_halo_exchange": 0, "saw_empty_halo": 0,
+           "saw_sparse_only_x_none": 0, "diag_exchanged_blocks": 0,
+           "diag_cases": 0}
 
-    def check(n, tm, tn, w, nnz, mode, strategy, eps, y_zero, seed):
-        adj = graph(n, nnz, seed)
+    def check(n, tm, tn, w, nnz, mode, strategy, eps, y_zero, seed,
+              adj=None, oracle=False, diag=False):
+        adj = adj if adj is not None else graph(n, nnz, seed)
         y = dense_y(n, w, seed, y_zero)
         ref = DynasparseEngine(tile_m=tm, tile_n=tn, literal=True,
                                mode=mode, strategy=strategy, eps=eps)
@@ -195,6 +199,27 @@ _GNN_SHARD_SCRIPT = textwrap.dedent("""
                 out["saw_mixed"] += 1
             if any(t.primitive == "SpMM" for t in plan.stq):
                 out["saw_spmm"] += 1
+            if not plan.dtq:
+                out["saw_sparse_only_x_none"] += 1
+            # halo introspection: did this case exchange anything?
+            sd = eng.sharded_dispatch_for(plan, adj)
+            if sd is not None and sd.halo is not None:
+                if sd.halo.max_take > 0:
+                    out["saw_halo_exchange"] += 1
+                elif nd > 1:
+                    out["saw_empty_halo"] += 1
+                if diag and nd > 1:
+                    out["diag_exchanged_blocks"] += int(sd.halo.max_take)
+            # halo vs replicated: same plan, two operand distributions,
+            # bitwise-equal results (replicated is the correctness oracle)
+            if oracle:
+                eng_r = DynasparseEngine(tile_m=tm, tile_n=tn, literal=True,
+                                         mode=mode, strategy=strategy,
+                                         eps=eps, mesh=MESHES[nd],
+                                         operand_sharding="replicate")
+                z_r = np.asarray(eng_r.matmul(adj, y)[0])
+                if not (z == z_r).all():
+                    out["halo_mismatch"] += 1
             # core property: the sharded compiled executor is bit-identical
             # to the single-device EAGER executor on the SAME placed plan
             key, entry = eng._packed_structure(plan, adj)
@@ -211,6 +236,8 @@ _GNN_SHARD_SCRIPT = textwrap.dedent("""
             if invariant and not (z == z_ref).all():
                 out["invariant_mismatch"] += 1
         out["cases"] += 1
+        if diag:
+            out["diag_cases"] += 1
 
     # pinned anchors: ragged tails, 7 stripes over 4/8 devices, dense-ish
     # mixed-queue graphs, eps-thresholded SpMM (sparse Y), forced queues
@@ -225,7 +252,52 @@ _GNN_SHARD_SCRIPT = textwrap.dedent("""
         (56, 8, 8, 8, 900, "sparse_only", "balanced", 0.5, 0.8, 8),
     ]
     for case in PINNED:
-        check(*case)
+        check(*case, oracle=True)
+
+    # empty-halo anchor: a block-diagonal adjacency (every edge stays inside
+    # its own row block) never reads a neighbour's rows — the static
+    # exchange schedule must contain ZERO blocks at every mesh size, and
+    # the result must still match the replicated oracle bitwise.  Also the
+    # sparse-only (x=None) coverage anchor: mode forces the whole kernel
+    # onto STQ so no dense X operand exists at all.
+    def diag_graph(n, tm, seed):
+        r = np.random.default_rng(seed)
+        m = n * 6
+        rows = np.sort(r.integers(0, n, m)).astype(np.int32)
+        offs = r.integers(0, tm, m).astype(np.int32)
+        cols = np.minimum((rows // tm) * tm + offs, n - 1).astype(np.int32)
+        vals = r.standard_normal(m).astype(np.float32)
+        return SparseCOO((n, n), jnp.asarray(rows), jnp.asarray(cols),
+                         jnp.asarray(vals), tag="adjacency")
+
+    check(64, 8, 8, 8, 0, "sparse_only", "greedy", 0.0, 0.0, 42,
+          adj=diag_graph(64, 8, 42), oracle=True, diag=True)
+
+    # heterogeneous per-device cost models: a 2x slower device must get a
+    # SMALLER row-band than under the homogeneous default, and the result
+    # stays bitwise-equal (banding only moves work, never changes math for
+    # banding-invariant modes)
+    import dataclasses as _dc
+    from repro.core.perfmodel import VCK5000
+    slow = _dc.replace(VCK5000, name="vck5000-half",
+                       f_dense=VCK5000.f_dense / 2,
+                       f_sparse=VCK5000.f_sparse / 2,
+                       mem_bw=VCK5000.mem_bw / 2)
+    adj_h = graph(256, 4000, 77)
+    y_h = dense_y(256, 16, 77, 0.0)
+    eng_homog = DynasparseEngine(tile_m=8, tile_n=8, literal=True,
+                                 mode="sparse_only", strategy="greedy",
+                                 mesh=MESHES[4])
+    eng_hetero = DynasparseEngine(tile_m=8, tile_n=8, literal=True,
+                                  mode="sparse_only", strategy="greedy",
+                                  mesh=MESHES[4],
+                                  per_device_models=[VCK5000, slow,
+                                                     VCK5000, VCK5000])
+    z_homog = np.asarray(eng_homog.matmul(adj_h, y_h)[0])
+    z_hetero = np.asarray(eng_hetero.matmul(adj_h, y_h)[0])
+    out["homog_bands"] = list(eng_homog.last_plan.placement.band_sizes())
+    out["hetero_bands"] = list(eng_hetero.last_plan.placement.band_sizes())
+    out["hetero_bitwise"] = int((z_homog == z_hetero).all())
 
     try:
         from hypothesis import HealthCheck, given, settings
@@ -313,6 +385,38 @@ def test_property_sweep_coverage(gnn_shard_results):
     assert r["saw_spmm"] > 0           # eps-thresholded / sparse-Y SpMM
     assert r["saw_nondivisible"] > 0   # stripes not divisible by devices
     assert r["saw_ragged"] > 0         # ragged last stripe
+    assert r["saw_sparse_only_x_none"] > 0  # no dense X operand at all
+
+
+def test_halo_matches_replicated_oracle(gnn_shard_results):
+    """Owned+halo operand distribution is bitwise-identical to the
+    replicate-everything oracle on the same placed plan, meshes 1/4/8 —
+    and the sweep genuinely exchanged halo blocks (not all-empty)."""
+    r, _ = gnn_shard_results
+    assert r["halo_mismatch"] == 0
+    assert r["saw_halo_exchange"] > 0
+
+
+def test_block_diagonal_graph_exchanges_nothing(gnn_shard_results):
+    """A block-diagonal adjacency has no cross-band edges: the static
+    exchange schedule must be empty (zero blocks, zero ppermute rounds) at
+    every mesh size > 1, while results still match the oracle bitwise."""
+    r, _ = gnn_shard_results
+    assert r["diag_cases"] >= 1
+    assert r["diag_exchanged_blocks"] == 0
+    assert r["saw_empty_halo"] > 0
+
+
+def test_heterogeneous_models_shift_band_split(gnn_shard_results):
+    """per_device_models= feeds the band DP genuinely different cost
+    models: a 2x slower device gets a strictly smaller row-band than under
+    the homogeneous default, with bitwise-equal results (banding moves
+    work, not math, in banding-invariant modes)."""
+    r, _ = gnn_shard_results
+    homog, hetero = r["homog_bands"], r["hetero_bands"]
+    assert sum(hetero) == sum(homog)   # all stripes still placed
+    assert hetero[1] < homog[1]        # the slow device (index 1) shrank
+    assert r["hetero_bitwise"] == 1
 
 
 def test_mesh8_snapshot_safe_on_one_device(gnn_shard_results):
